@@ -1,0 +1,103 @@
+"""Paper Table 3 analogue: incremental ablation of DyMoE's components on
+Mixtral-8×7B at 16 GB and 24 GB (modeled edge latency, real orchestrator).
+
+Rows: 1 Load-on-Demand; 2 +Cache; 3 +Cache+Prefetch; 4 Cache+Dyquant(4/2);
+5 Cache+Dyquant(4/2)+Prefetcher; 6 Cache+Dyquant(4/0)+Prefetcher.
+"""
+from __future__ import annotations
+
+from typing import List
+
+import numpy as np
+
+from benchmarks.bench_e2e_latency import DECODE_STEPS, PREFILL_LEN, \
+    _run_system, _system
+from benchmarks.common import zipf_routing_trace
+from repro.configs import get_config
+from repro.core.orchestrator import DynamicExpertOrchestrator, \
+    OrchestratorConfig
+from repro.serving.cost_model import expert_bytes
+
+ROWS = [
+    ("1. Load on Demand", dict(cache=False, prefetch=False, dyq=None)),
+    ("2. Cache", dict(cache=True, prefetch=False, dyq=None)),
+    ("3. Cache + Prefetch", dict(cache=True, prefetch=True, dyq=None)),
+    ("4. Cache+Dyquant(4/2)", dict(cache=True, prefetch=False, dyq="4/2")),
+    ("5. Cache+Dyquant(4/2)+Prefetcher",
+     dict(cache=True, prefetch=True, dyq="4/2")),
+    ("6. Cache+Dyquant(4/0)+Prefetcher",
+     dict(cache=True, prefetch=True, dyq="4/0")),
+]
+
+
+def _row_system(cfg, vram_gb: int, cache: bool, prefetch: bool, dyq):
+    b4, b2 = expert_bytes(cfg, 4), expert_bytes(cfg, 2)
+    return OrchestratorConfig(
+        num_layers=cfg.num_layers, num_experts=cfg.num_experts,
+        experts_per_token=cfg.num_experts_per_tok,
+        bytes_high=b4,
+        bytes_low=(0 if dyq == "4/0" else (b2 if dyq == "4/2" else b4)),
+        low_is_skip=dyq == "4/0",
+        vram_budget_bytes=int((vram_gb << 30) * 0.6),
+        enable_cache=cache, enable_prefetch=prefetch,
+        enable_dyquant=dyq is not None,
+        pcie_bw=16e9)
+
+
+def run() -> List[dict]:
+    import benchmarks.bench_e2e_latency as e2e
+    from repro.core.schedule import critical_counts
+    from repro.serving.cost_model import EdgeCostModel, EdgeProfile
+
+    cfg = get_config("mixtral_8x7b")
+    out = []
+    for vram in (16, 24):
+        for label, flags in ROWS:
+            ocfg = _row_system(cfg, vram, flags["cache"], flags["prefetch"],
+                               flags["dyq"])
+            orch = DynamicExpertOrchestrator(ocfg)
+            cost = EdgeCostModel(cfg, EdgeProfile().with_vram(vram))
+            t_l = critical_counts(cfg.num_layers, cfg.num_experts,
+                                  cfg.dymoe.lam)
+            masks = list(zipf_routing_trace(
+                cfg.num_layers, cfg.num_experts, cfg.num_experts_per_tok,
+                DECODE_STEPS + 1, seed=7))
+            all_active = [np.ones(cfg.num_experts, bool)] * cfg.num_layers
+            crit = []
+            for l in range(cfg.num_layers):
+                m = np.zeros(cfg.num_experts, bool)
+                m[:t_l[l]] = True
+                crit.append(m)
+            compute = [cost.layer_compute_s(
+                phase="prefill", s_ctx=PREFILL_LEN, s_q=PREFILL_LEN,
+                active_experts_hi=int(c.sum()),
+                active_experts_lo=cfg.num_experts - int(c.sum()),
+                tokens_routed=PREFILL_LEN) for c in crit]
+            ttft = orch.step(crit, all_active,
+                             [a.astype(float) for a in all_active],
+                             compute).total_s
+            steps = []
+            for t in range(DECODE_STEPS):
+                active = list(masks[t])
+                cr = []
+                for l in range(cfg.num_layers):
+                    ids = np.flatnonzero(active[l])[:t_l[l]]
+                    m = np.zeros(cfg.num_experts, bool)
+                    m[ids] = True
+                    cr.append(m)
+                pred = list(masks[t + 1].astype(float))
+                comp = [cost.layer_compute_s(
+                    phase="decode", s_ctx=PREFILL_LEN + t, s_q=1,
+                    active_experts_hi=int(c.sum()),
+                    active_experts_lo=int(a.sum()) - int((c & a).sum()),
+                    tokens_routed=1) for c, a in zip(cr, active)]
+                steps.append(orch.step(cr, active, pred, comp).total_s)
+            out.append(dict(bench="ablation", vram_gb=vram, row=label,
+                            ttft_s=round(ttft, 4),
+                            tpot_s=round(float(np.mean(steps)), 5)))
+    return out
+
+
+if __name__ == "__main__":
+    for r in run():
+        print(r)

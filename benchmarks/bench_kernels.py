@@ -1,0 +1,49 @@
+"""Kernel-level microbenchmark: quant_matmul traffic model + oracle match.
+
+On this CPU container the Pallas kernel runs in interpret mode (Python), so
+wall-clock is meaningless for the TPU target; what IS meaningful and
+reported here:
+  * correctness (max |err| vs the jnp oracle) across bit widths,
+  * the HBM traffic ratio each bit width implies (the quantity DyMoE's
+    latency model rides on): bytes(int_b) / bytes(bf16).
+"""
+from __future__ import annotations
+
+import time
+from typing import List
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels.quant_matmul.ops import quant_matmul
+from repro.quant import QuantizedTensor
+
+
+def run() -> List[dict]:
+    rng = np.random.default_rng(0)
+    m, k, n = 64, 1024, 256
+    x = jnp.asarray(rng.standard_normal((m, k)), jnp.float32)
+    w = jnp.asarray(rng.standard_normal((k, n)), jnp.float32)
+    bf16_bytes = k * n * 2
+    rows = []
+    for bits in (8, 4, 2):
+        qt = QuantizedTensor.quantize(w, bits, 64)
+        t0 = time.perf_counter()
+        ref = quant_matmul(x, qt, impl="ref", out_dtype=jnp.float32)
+        ref.block_until_ready()
+        t_ref = (time.perf_counter() - t0) * 1e6
+        pal = quant_matmul(x, qt, impl="pallas", interpret=True,
+                           block_m=32, block_n=64, block_k=256,
+                           out_dtype=jnp.float32)
+        err = float(jnp.abs(ref - pal).max())
+        rows.append(dict(
+            bench="kernels", kernel="quant_matmul", bits=bits,
+            us_per_call=round(t_ref, 1),
+            max_err_vs_oracle=err,
+            hbm_traffic_ratio=round(qt.nbytes() / bf16_bytes, 4)))
+    return rows
+
+
+if __name__ == "__main__":
+    for r in run():
+        print(r)

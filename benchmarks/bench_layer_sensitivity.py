@@ -1,0 +1,60 @@
+"""Paper Fig. 5 analogue: layer-wise sensitivity to Int2 quantization.
+
+Quantize ONE layer's experts to Int2 (all others bf16), measure eval CE per
+layer position. Expected shape: shallow layers hurt more than deep layers —
+the empirical basis of the depth-aware schedule (Eq. 4).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import List
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import _DATA, get_trained_moe
+from repro.data import synthetic_lm_batches
+from repro.models import forward
+from repro.quant.quantize import dequantize_groupwise, quantize_groupwise
+
+
+def _quantize_layer_int2(params, layer: int):
+    """Return params with layer ``layer``'s expert weights RTN-int2'd."""
+    new_moe = dict(params["layers"]["moe"])
+    for name in ("w_gate", "w_up", "w_down"):
+        w = new_moe[name]
+
+        def q2(x):
+            q, s = quantize_groupwise(x, 2, 64)
+            return dequantize_groupwise(q, s, 64, x.dtype)
+
+        new_moe[name] = w.at[layer].set(q2(w[layer]))
+    layers = dict(params["layers"], moe=new_moe)
+    return dict(params, layers=layers)
+
+
+def run() -> List[dict]:
+    cfg, params = get_trained_moe()
+    data = synthetic_lm_batches(dataclasses.replace(_DATA, seed=55))
+    batch = {k: jnp.asarray(v) for k, v in next(data).items()}
+
+    def ce(p):
+        logits, _ = forward(p, cfg, batch["tokens"])
+        logp = jax.nn.log_softmax(logits, axis=-1)
+        return float(-jnp.take_along_axis(
+            logp, batch["labels"][..., None], axis=-1).mean())
+
+    base = ce(params)
+    rows = [dict(bench="layer_sensitivity", layer=-1, note="bf16 baseline",
+                 eval_ce=round(base, 4), delta=0.0)]
+    for l in range(cfg.num_layers):
+        c = ce(_quantize_layer_int2(params, l))
+        rows.append(dict(bench="layer_sensitivity", layer=l,
+                         eval_ce=round(c, 4), delta=round(c - base, 4)))
+    return rows
+
+
+if __name__ == "__main__":
+    for r in run():
+        print(r)

@@ -1,0 +1,75 @@
+"""Paper Fig. 6 analogue: adjacent-layer activation cosine similarity —
+the empirical basis of look-ahead prefetching (Eq. 6), plus the predictor's
+actual top-k hit rate (does h^(l) predict layer l+1's experts?).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import List
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import _DATA, get_trained_moe
+from repro.core.prefetch import layer_similarity, predict_next_gates
+from repro.data import synthetic_lm_batches
+from repro.models.config import ModelConfig
+from repro.models.layers.attention import attention_train
+from repro.models.layers.moe import moe_apply
+from repro.models.layers.norms import rmsnorm
+
+
+def _per_layer_hidden(params, cfg: ModelConfig, tokens):
+    """Replay the stack layer-by-layer, collecting pre-FFN hidden states and
+    each layer's routed expert sets."""
+    x = jnp.take(params["embed"], tokens, axis=0)
+    b, s, _ = x.shape
+    hs, routed = [], []
+    for l in range(cfg.num_layers):
+        lp = jax.tree.map(lambda a: a[l], params["layers"])
+        a, _, _ = attention_train(lp["attn"], cfg,
+                                  rmsnorm(lp["norm1"], x, cfg.norm_eps))
+        x = x + a
+        h = rmsnorm(lp["norm2"], x, cfg.norm_eps)
+        hs.append(h)
+        y, stats = moe_apply(lp["moe"], cfg, h.reshape(b * s, -1))
+        routed.append(np.asarray(stats.expert_load) > 0)
+        x = x + y.reshape(b, s, -1)
+    return hs, routed
+
+
+def run() -> List[dict]:
+    cfg, params = get_trained_moe()
+    data = synthetic_lm_batches(dataclasses.replace(_DATA, seed=33))
+    tokens = jnp.asarray(next(data)["tokens"])
+    hs, routed = _per_layer_hidden(params, cfg, tokens)
+    rows = []
+    hits, total = 0, 0
+    for l in range(cfg.num_layers - 1):
+        sim = float(layer_similarity(hs[l], hs[l + 1]))
+        # Eq. 6 prediction quality: predict layer l+1 experts from h^(l)
+        wg_next = params["layers"]["moe"]["wg_router"][l + 1]
+        pred = predict_next_gates(hs[l].reshape(-1, cfg.d_model), wg_next)
+        topk = np.asarray(
+            jax.lax.top_k(pred, cfg.num_experts_per_tok)[1])
+        true_topk = np.asarray(jax.lax.top_k(
+            jax.nn.softmax(hs[l + 1].reshape(-1, cfg.d_model).astype(
+                jnp.float32) @ wg_next), cfg.num_experts_per_tok)[1])
+        hit = np.mean([len(set(a) & set(b)) / len(a)
+                       for a, b in zip(topk, true_topk)])
+        hits += hit
+        total += 1
+        rows.append(dict(bench="layer_similarity", layer_pair=f"{l}->{l+1}",
+                         cosine=round(sim, 4),
+                         prefetch_topk_hit=round(float(hit), 4)))
+    rows.append(dict(bench="layer_similarity", layer_pair="mean",
+                     cosine=round(float(np.mean(
+                         [r["cosine"] for r in rows])), 4),
+                     prefetch_topk_hit=round(hits / total, 4)))
+    return rows
+
+
+if __name__ == "__main__":
+    for r in run():
+        print(r)

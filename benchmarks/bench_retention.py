@@ -1,0 +1,44 @@
+"""Paper Table 2 / Fig. 11 analogue: eval quality vs retention ratio r for
+the 4/2 and 4/0 configurations, on the trained benchmark MoE.
+
+Reports last-token CE through the REAL DyMoE prefill path (importance
+estimation + depth schedule + mixed-precision experts). Expected shape:
+higher r -> better (lower) CE; r=1.0 == uniform high-bit.
+"""
+from __future__ import annotations
+
+from typing import List
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import get_trained_moe, _quantized_ce, _DATA
+from repro.data import synthetic_lm_batches
+from repro.models import prefill, quantize_model
+from repro.models.config import DyMoEPolicy
+
+
+def run() -> List[dict]:
+    cfg, params = get_trained_moe()
+    data = synthetic_lm_batches(dataclasses.replace(_DATA, seed=77))
+    batches = [next(data) for _ in range(4)]
+    rows = []
+    for low_bits, label in ((2, "4/2"), (0, "4/0")):
+        for r in (0.5, 0.6, 0.75, 0.9, 1.0):
+            c = dataclasses.replace(cfg, dymoe=DyMoEPolicy(
+                high_bits=4, low_bits=low_bits, retention=r))
+            qp = quantize_model(params, c)
+            ce = 0.0
+            for b in batches:
+                batch = {k: jnp.asarray(v) for k, v in b.items()}
+                ce += float(_quantized_ce(c, params, qp, batch))
+            rows.append(dict(bench="retention", config=label, retention=r,
+                             eval_ce=round(ce / len(batches), 4)))
+    return rows
+
+
+if __name__ == "__main__":
+    for r in run():
+        print(r)

@@ -1,0 +1,46 @@
+"""§Roofline table: reads the dry-run artifacts (experiments/dryrun/*.jsonl)
+and emits the three-term roofline per (arch × shape × mesh) with the
+dominant bottleneck and the useful-FLOPs ratio."""
+from __future__ import annotations
+
+import json
+import os
+from typing import List
+
+DRYRUN_DIR = os.path.join(os.path.dirname(os.path.dirname(
+    os.path.abspath(__file__))), "experiments", "dryrun")
+
+
+def run() -> List[dict]:
+    rows = []
+    if not os.path.isdir(DRYRUN_DIR):
+        return [dict(bench="roofline",
+                     note="no dry-run artifacts; run repro.launch.dryrun")]
+    for fn in sorted(os.listdir(DRYRUN_DIR)):
+        if not fn.endswith(".jsonl"):
+            continue
+        seen = {}
+        for line in open(os.path.join(DRYRUN_DIR, fn)):
+            r = json.loads(line)
+            # keep the LAST record per (arch, shape) — later runs supersede
+            seen[(r["arch"], r["shape"], r.get("expert_parallel", False))] = r
+        for r in seen.values():
+            rows.append(dict(
+                bench="roofline", mesh=r["mesh"], arch=r["arch"],
+                shape=r["shape"], ep=r.get("expert_parallel", False),
+                opts="+".join(r.get("opts", [])) or "baseline",
+                t_compute_s=round(r["t_compute_s"], 6),
+                t_memory_s=round(r["t_memory_s"], 6),
+                t_collective_s=round(r["t_collective_s"], 6),
+                dominant=r["dominant"],
+                useful_flops_ratio=round(r["useful_flops_ratio"], 4),
+                peak_gb=round((r["memory"].get("peak_bytes") or 0)
+                              / (1 << 30), 2),
+                compile_s=r["compile_s"],
+            ))
+    return rows
+
+
+if __name__ == "__main__":
+    for r in run():
+        print(r)

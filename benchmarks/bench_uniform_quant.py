@@ -1,0 +1,54 @@
+"""Paper Table 1 analogue: quality under UNIFORM quantization (BF16 / Int4 /
+Int2) — the motivation table (Int2 collapses; Int4 slightly degrades).
+
+Uniform int-b == DyMoE with retention=1.0 and high_bits=b (every expert
+Critical at bit-width b), so the same machinery produces the table.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import List
+
+import jax.numpy as jnp
+
+from benchmarks.common import _DATA, _quantized_ce, get_trained_moe
+from repro.data import synthetic_lm_batches
+from repro.models import prefill, quantize_model
+from repro.models.config import DyMoEPolicy
+
+
+def run() -> List[dict]:
+    cfg, params = get_trained_moe()
+    data = synthetic_lm_batches(dataclasses.replace(_DATA, seed=88))
+    batches = [next(data) for _ in range(4)]
+
+    def last_token_ce(qp_cfg=None, qp=None):
+        ce = 0.0
+        for b in batches:
+            batch = {k: jnp.asarray(v) for k, v in b.items()}
+            if qp is None:
+                logits, _, _ = prefill(params, cfg, batch["tokens"],
+                                       cache_slots=batch["tokens"].shape[1],
+                                       full_logits=True)
+                import jax
+                logp = jax.nn.log_softmax(logits, axis=-1)
+                ce += float(-jnp.take_along_axis(
+                    logp, batch["labels"][..., None], axis=-1).mean())
+            else:
+                ce += float(_quantized_ce(qp_cfg, params, qp, batch))
+        return ce / len(batches)
+
+    rows = [dict(bench="uniform_quant", precision="bf16",
+                 eval_ce=round(last_token_ce(), 4))]
+    for bits in (8, 4, 2):
+        c = dataclasses.replace(cfg, dymoe=DyMoEPolicy(
+            high_bits=bits, low_bits=2 if bits > 2 else 0, retention=1.0))
+        qp = quantize_model(params, c)
+        rows.append(dict(bench="uniform_quant", precision=f"int{bits}",
+                         eval_ce=round(last_token_ce(c, qp), 4)))
+    return rows
+
+
+if __name__ == "__main__":
+    for r in run():
+        print(r)

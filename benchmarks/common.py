@@ -1,0 +1,114 @@
+"""Shared benchmark infrastructure: a small-but-real MoE trained once on
+structured synthetic data (cached on disk), plus evaluation helpers.
+
+Paper-scale accuracy numbers (MMLU on Mixtral-8×7B) are not reproducible
+without released weights; every accuracy-flavored benchmark therefore
+reports *eval loss / greedy-agreement of the mechanism* on this trained
+model, mirroring the paper's table SHAPES (orderings, trends), while the
+latency benchmarks run the full-size byte/FLOP model of the real configs
+through the real orchestrator. See DESIGN.md §2.
+"""
+from __future__ import annotations
+
+import dataclasses
+import os
+from typing import Dict, Iterator, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.data import DataConfig, synthetic_lm_batches
+from repro.models import ModelConfig, init_params, loss_fn, prefill, \
+    quantize_model
+from repro.models.config import DyMoEPolicy
+from repro.training import TrainLoop, TrainLoopConfig, load_checkpoint, \
+    save_checkpoint
+
+CKPT_DIR = os.path.join(os.path.dirname(__file__), "_artifacts")
+
+BENCH_MOE = ModelConfig(
+    name="bench-moe", arch_type="moe", num_layers=8, d_model=128,
+    vocab_size=256, num_heads=4, num_kv_heads=2, head_dim=32,
+    num_experts=8, num_experts_per_tok=2, moe_d_ff=128,
+    capacity_factor=4.0, dtype="float32", remat="none",
+    dymoe=DyMoEPolicy(high_bits=4, low_bits=2, retention=0.75))
+
+_DATA = DataConfig(batch_size=8, seq_len=64, vocab_size=256, seed=0)
+
+
+def get_trained_moe(steps: int = 150) -> Tuple[ModelConfig, Dict]:
+    """Train (or load) the shared benchmark MoE."""
+    cfg = BENCH_MOE
+    path = os.path.join(CKPT_DIR, f"step_{steps:08d}")
+    template = init_params(cfg, jax.random.PRNGKey(0))
+    if os.path.isdir(path):
+        params, _ = load_checkpoint(CKPT_DIR, steps, template)
+        return cfg, params
+    loop = TrainLoop(cfg, TrainLoopConfig(steps=steps, lr=5e-3, warmup=20,
+                                          log_every=0))
+    loop.params = template
+    loop.run(synthetic_lm_batches(_DATA))
+    os.makedirs(CKPT_DIR, exist_ok=True)
+    save_checkpoint(CKPT_DIR, steps, loop.params)
+    return cfg, loop.params
+
+
+def eval_loss(cfg: ModelConfig, params, qparams=None, n_batches: int = 4,
+              seed: int = 1234) -> float:
+    """Next-token eval loss; with qparams, through the DyMoE prefill path."""
+    data = synthetic_lm_batches(dataclasses.replace(_DATA, seed=seed,
+                                                    vocab_size=cfg.vocab_size))
+    total = 0.0
+    for _ in range(n_batches):
+        batch = {k: jnp.asarray(v) for k, v in next(data).items()}
+        if qparams is None:
+            loss, m = loss_fn(params, cfg, batch)
+            total += float(m["ce"])
+        else:
+            total += float(_quantized_ce(cfg, params, qparams, batch))
+    return total / n_batches
+
+
+def _quantized_ce(cfg, params, qparams, batch) -> jnp.ndarray:
+    """Full-sequence CE of the DyMoE mixed-precision forward (the real
+    prefill path: importance estimation + depth schedule + mixed-precision
+    experts), teacher-forced over every position."""
+    toks, labels = batch["tokens"], batch["labels"]
+    logits, _, _ = prefill(params, cfg, toks, qparams=qparams,
+                           cache_slots=toks.shape[1], full_logits=True)
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    return -jnp.take_along_axis(logp, labels[..., None], axis=-1).mean()
+
+
+def quantized_policy_model(cfg: ModelConfig, params, *, high_bits=4,
+                           low_bits=2, retention=0.75, schedule="cosine"):
+    c = dataclasses.replace(cfg, dymoe=DyMoEPolicy(
+        high_bits=high_bits, low_bits=low_bits, retention=retention,
+        depth_schedule=schedule))
+    return c, quantize_model(params, c)
+
+
+def zipf_routing_trace(num_layers: int, num_experts: int, k: int,
+                       steps: int, seed: int = 0, alpha: float = 1.2
+                       ) -> Iterator[np.ndarray]:
+    """Synthetic skewed routing for full-scale latency simulation: expert
+    popularity is Zipf-distributed with slowly drifting identity (paper
+    §3.1: skewed + input-dependent)."""
+    rng = np.random.default_rng(seed)
+    rank_of = rng.permutation(num_experts)  # expert -> popularity rank
+    weights = 1.0 / np.arange(1, num_experts + 1) ** alpha
+    for t in range(steps):
+        if t and t % 16 == 0:  # drift the hotspot set (input-dependence)
+            i, j = rng.integers(num_experts, size=2)
+            rank_of[[i, j]] = rank_of[[j, i]]
+        p = weights[rank_of]
+        p = p / p.sum()
+        layers = []
+        for _ in range(num_layers):
+            active = rng.choice(num_experts, size=min(k, num_experts),
+                                replace=False, p=p)
+            mask = np.zeros(num_experts, bool)
+            mask[active] = True
+            layers.append(mask)
+        yield np.stack(layers)

@@ -1,0 +1,87 @@
+"""Generate the §Dry-run / §Roofline markdown tables for EXPERIMENTS.md
+from experiments/dryrun/*.jsonl artifacts.
+
+    PYTHONPATH=src python -m benchmarks.make_experiments_tables
+"""
+from __future__ import annotations
+
+import json
+import os
+import sys
+
+DIR = os.path.join(os.path.dirname(os.path.dirname(os.path.abspath(
+    __file__))), "experiments", "dryrun")
+
+
+def load(fn):
+    seen = {}
+    path = os.path.join(DIR, fn)
+    if not os.path.exists(path):
+        return seen
+    for line in open(path):
+        r = json.loads(line)
+        seen[(r["arch"], r["shape"])] = r
+    return seen
+
+
+def fmt_s(x):
+    if x == 0:
+        return "0"
+    if x < 1e-4:
+        return f"{x*1e6:.1f}us"
+    if x < 0.1:
+        return f"{x*1e3:.2f}ms"
+    return f"{x:.3f}s"
+
+
+def roofline_table(rows):
+    out = ["| arch | shape | t_compute | t_memory | t_collective |"
+           " dominant | useful FLOPs | peak GB/dev | compile s |",
+           "|---|---|---|---|---|---|---|---|---|"]
+    for (a, s), r in sorted(rows.items()):
+        peak = (r["memory"].get("peak_bytes") or 0) / (1 << 30)
+        out.append(
+            f"| {a} | {s} | {fmt_s(r['t_compute_s'])} "
+            f"| {fmt_s(r['t_memory_s'])} | {fmt_s(r['t_collective_s'])} "
+            f"| **{r['dominant']}** | {r['useful_flops_ratio']:.3f} "
+            f"| {peak:.2f} | {r['compile_s']:.0f} |")
+    return "\n".join(out)
+
+
+def dryrun_table(single, multi):
+    out = ["| arch | shape | 16x16 compile | peak GB/dev | 2x16x16 compile |"
+           " peak GB/dev |", "|---|---|---|---|---|---|"]
+    for key in sorted(single):
+        r1, r2 = single[key], multi.get(key)
+        p1 = (r1["memory"].get("peak_bytes") or 0) / (1 << 30)
+        if r2:
+            p2 = (r2["memory"].get("peak_bytes") or 0) / (1 << 30)
+            c2, g2 = f"{r2['compile_s']:.0f}s OK", f"{p2:.2f}"
+        else:
+            c2, g2 = "—", "—"
+        out.append(f"| {key[0]} | {key[1]} | {r1['compile_s']:.0f}s OK "
+                   f"| {p1:.2f} | {c2} | {g2} |")
+    return "\n".join(out)
+
+
+def main():
+    single = load("16x16.jsonl")
+    multi = load("2x16x16.jsonl")
+    print("## §Dry-run (lower + compile proof, per mesh)\n")
+    print(dryrun_table(single, multi))
+    print("\n## §Roofline (single-pod 16x16, per-device terms)\n")
+    print(roofline_table(single))
+    # collective detail
+    print("\n### Collective-volume detail (single-pod, global bytes/step)\n")
+    print("| arch | shape | all-gather | all-reduce | reduce-scatter "
+          "| all-to-all | permute |")
+    print("|---|---|---|---|---|---|---|")
+    for (a, s), r in sorted(single.items()):
+        c = r["collectives"]
+        print(f"| {a} | {s} | {c['all-gather']:.3g} | {c['all-reduce']:.3g} "
+              f"| {c['reduce-scatter']:.3g} | {c['all-to-all']:.3g} "
+              f"| {c['collective-permute']:.3g} |")
+
+
+if __name__ == "__main__":
+    main()

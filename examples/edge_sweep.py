@@ -1,0 +1,33 @@
+"""Sweep VRAM budgets × DyMoE policies on the paper's evaluation models at
+FULL byte scale (orchestrator + cost model; no weights needed) — the
+Fig. 10 grid as a runnable script.
+
+    PYTHONPATH=src python examples/edge_sweep.py [--arch mixtral-8x7b]
+"""
+import argparse
+
+from benchmarks.bench_e2e_latency import _run_system
+from repro.configs import get_config
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="mixtral-8x7b",
+                    choices=["mixtral-8x7b", "qwen3-30b-a3b"])
+    args = ap.parse_args()
+    cfg = get_config(args.arch)
+    print(f"{args.arch}: {cfg.num_experts} experts, "
+          f"top-{cfg.num_experts_per_tok}, {cfg.num_layers} layers\n")
+    print(f"{'system':20s} {'vram':>5s} {'TTFT':>9s} {'TPOT':>9s} "
+          f"{'hit rate':>8s}")
+    for vram in (12, 16, 24):
+        for system in ("accelerate", "mixtral-offloading", "moe-infinity",
+                       "dymoe-4/2", "dymoe-4/0"):
+            ttft, tpot, stats = _run_system(system, cfg, vram)
+            print(f"{system:20s} {vram:4d}G {ttft:8.3f}s {tpot:8.4f}s "
+                  f"{stats.hit_rate:8.2%}")
+        print()
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,34 @@
+"""Quickstart: build a small MoE, quantize it with DyMoE's mixed-precision
+spectrum, and serve a request through the Dynamic Expert Orchestration
+Engine with edge-latency accounting.
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+import jax
+
+from repro.configs import get_config
+from repro.models import init_params
+from repro.serving import DyMoEEngine, EngineConfig, Request
+from repro.serving.cost_model import EdgeProfile
+
+
+def main():
+    # OLMoE (64 experts, top-8) in its reduced CPU-scale variant
+    cfg = get_config("olmoe-1b-7b").reduced()
+    print(f"arch={cfg.name}  experts={cfg.num_experts} "
+          f"top-{cfg.num_experts_per_tok}  dymoe={cfg.dymoe}")
+
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    engine = DyMoEEngine(cfg, params, EngineConfig(
+        profile=EdgeProfile().with_vram(16)))
+
+    result = engine.generate(Request(
+        prompt_tokens=list(range(1, 33)), max_new_tokens=16))
+    print("generated tokens:", result.tokens)
+    print(f"modeled edge TTFT  = {result.ttft_s * 1e3:8.3f} ms")
+    print(f"modeled edge TPOT  = {result.tpot_s * 1e3:8.3f} ms")
+    print(f"cache stats        = {result.cache_stats}")
+
+
+if __name__ == "__main__":
+    main()

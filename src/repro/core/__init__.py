@@ -1,0 +1,34 @@
+"""DyMoE core — the paper's contribution as composable JAX modules.
+
+* ``schedule``   — depth-aware cosine retention schedule (Eq. 4–5).
+* ``importance`` — phase-adaptive expert importance (Eq. 1–3) and critical
+  expert selection.
+* ``prefetch``   — look-ahead gate prediction (Eq. 6–8).
+* ``cache``      — mixed-precision LRU cache manager (§4.4.2).
+* ``orchestrator`` — host-side Dynamic Expert Orchestration Engine tying
+  cache + prefetcher + cost model together for edge serving.
+"""
+from repro.core.schedule import retention_ratio, critical_counts
+from repro.core.importance import (
+    heavy_hitter_mask,
+    prefill_expert_importance,
+    decode_expert_importance,
+    select_critical,
+)
+from repro.core.prefetch import predict_next_gates, prefetch_targets
+from repro.core.cache import MixedPrecisionLRUCache, CacheEntry
+from repro.core.orchestrator import DynamicExpertOrchestrator
+
+__all__ = [
+    "retention_ratio",
+    "critical_counts",
+    "heavy_hitter_mask",
+    "prefill_expert_importance",
+    "decode_expert_importance",
+    "select_critical",
+    "predict_next_gates",
+    "prefetch_targets",
+    "MixedPrecisionLRUCache",
+    "CacheEntry",
+    "DynamicExpertOrchestrator",
+]

@@ -1,0 +1,160 @@
+"""Mixed-Precision Cache Management (paper §4.4.2).
+
+An LRU cache over per-expert weight blobs extended with precision awareness,
+governed by the paper's three rules:
+
+  * **No Duplication** — an expert is resident in exactly one format.
+  * **Precision Promotion** — a High request over a Low-resident expert is a
+    miss: the High copy is loaded and the Low copy evicted.
+  * **Conservative Reuse** — a Low request over a High-resident expert is a
+    hit on the High copy (no extra I/O, no accuracy loss).
+
+The cache is capacity-bounded in *bytes* (the edge VRAM budget). Loads are
+charged to a transfer ledger the engine uses for TTFT/TPOT accounting; the
+prefetcher calls ``prefetch`` which performs the same admission logic but is
+charged to the overlap window instead of the critical path.
+"""
+from __future__ import annotations
+
+import dataclasses
+from collections import OrderedDict
+from typing import Callable, Dict, Hashable, Optional, Tuple
+
+__all__ = ["CacheEntry", "MixedPrecisionLRUCache", "CacheStats"]
+
+Key = Hashable  # (layer, expert)
+
+
+@dataclasses.dataclass
+class CacheEntry:
+    key: Key
+    precision: str        # "high" | "low"
+    nbytes: int
+    payload: object = None  # device buffers (or None in simulation mode)
+
+
+@dataclasses.dataclass
+class CacheStats:
+    hits: int = 0
+    misses: int = 0
+    promotions: int = 0
+    conservative_reuses: int = 0
+    evictions: int = 0
+    bytes_loaded: int = 0
+    prefetch_bytes: int = 0
+    prefetch_hits: int = 0
+
+    @property
+    def hit_rate(self) -> float:
+        total = self.hits + self.misses
+        return self.hits / total if total else 0.0
+
+
+_RANK = {"low": 0, "high": 1}
+
+
+class MixedPrecisionLRUCache:
+    """Byte-budgeted LRU over (layer, expert) -> single-precision residency."""
+
+    def __init__(self, capacity_bytes: int,
+                 loader: Optional[Callable[[Key, str], Tuple[object, int]]] = None):
+        """loader(key, precision) -> (payload, nbytes). In simulation mode
+        (loader=None) the caller passes nbytes explicitly to get/prefetch."""
+        self.capacity = int(capacity_bytes)
+        self._loader = loader
+        self._entries: "OrderedDict[Key, CacheEntry]" = OrderedDict()
+        self._used = 0
+        self.stats = CacheStats()
+
+    # ------------------------------------------------------------ helpers
+    def __contains__(self, key: Key) -> bool:
+        return key in self._entries
+
+    def resident_precision(self, key: Key) -> Optional[str]:
+        e = self._entries.get(key)
+        return e.precision if e else None
+
+    @property
+    def used_bytes(self) -> int:
+        return self._used
+
+    def _touch(self, key: Key) -> None:
+        self._entries.move_to_end(key)
+
+    def _evict_until(self, need: int) -> None:
+        while self._used + need > self.capacity and self._entries:
+            _, old = self._entries.popitem(last=False)
+            self._used -= old.nbytes
+            self.stats.evictions += 1
+
+    def _remove(self, key: Key) -> None:
+        e = self._entries.pop(key, None)
+        if e is not None:
+            self._used -= e.nbytes
+
+    def _insert(self, key: Key, precision: str, nbytes: int,
+                payload: object) -> CacheEntry:
+        if nbytes > self.capacity:
+            raise ValueError(
+                f"entry {key} ({nbytes}B) exceeds cache capacity "
+                f"({self.capacity}B)")
+        self._evict_until(nbytes)
+        entry = CacheEntry(key, precision, nbytes, payload)
+        self._entries[key] = entry
+        self._used += nbytes
+        return entry
+
+    def _load(self, key: Key, precision: str, nbytes: Optional[int]
+              ) -> Tuple[object, int]:
+        if self._loader is not None:
+            return self._loader(key, precision)
+        assert nbytes is not None, "simulation mode requires nbytes"
+        return None, nbytes
+
+    # ------------------------------------------------------------ API
+    def get(self, key: Key, precision: str, *,
+            nbytes: Optional[int] = None) -> Tuple[CacheEntry, int]:
+        """Request an expert at a precision. Returns (entry, bytes_missed) —
+        bytes_missed > 0 means the transfer sits on the critical path."""
+        assert precision in _RANK
+        cur = self._entries.get(key)
+        if cur is not None:
+            if _RANK[cur.precision] >= _RANK[precision]:
+                # exact hit, or Conservative Reuse of a higher precision
+                if cur.precision != precision:
+                    self.stats.conservative_reuses += 1
+                self.stats.hits += 1
+                self._touch(key)
+                return cur, 0
+            # Precision Promotion: treat as miss, evict the Low copy
+            self.stats.promotions += 1
+            self._remove(key)
+        self.stats.misses += 1
+        payload, size = self._load(key, precision, nbytes)
+        entry = self._insert(key, precision, size, payload)
+        self.stats.bytes_loaded += size
+        return entry, size
+
+    def prefetch(self, key: Key, precision: str, *,
+                 nbytes: Optional[int] = None) -> int:
+        """Admit an expert ahead of use. Returns bytes transferred (0 if the
+        request is already satisfied under the same rules as ``get``)."""
+        cur = self._entries.get(key)
+        if cur is not None and _RANK[cur.precision] >= _RANK[precision]:
+            self._touch(key)
+            return 0
+        if cur is not None:
+            self._remove(key)
+        payload, size = self._load(key, precision, nbytes)
+        self._insert(key, precision, size, payload)
+        self.stats.prefetch_bytes += size
+        return size
+
+    def note_prefetch_hit(self) -> None:
+        self.stats.prefetch_hits += 1
+
+    def invariant_check(self) -> None:
+        used = sum(e.nbytes for e in self._entries.values())
+        assert used == self._used, (used, self._used)
+        assert self._used <= self.capacity, (self._used, self.capacity)
+        # No Duplication is structural: dict keyed by expert id.

@@ -1,0 +1,70 @@
+"""Phase-adaptive expert importance estimation (paper §4.2).
+
+Prefill (token-guided, Eq. 1–2): token semantic importance is the mean
+received attention mass over heads; the top-k such tokens are heavy-hitters;
+an expert's importance is the number of heavy-hitter tokens routed to it.
+
+Decode (gate-guided, Eq. 3): an expert's importance is its gate score.
+
+``select_critical`` turns an importance vector + the depth schedule's t_l
+into the per-expert Critical/Sub-critical mask consumed by the orchestration
+engine and the mixed-precision MoE layer. Everything is traceable (static
+shapes, lax.top_k).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+__all__ = [
+    "heavy_hitter_mask",
+    "prefill_expert_importance",
+    "decode_expert_importance",
+    "select_critical",
+]
+
+
+def heavy_hitter_mask(token_importance: jnp.ndarray, frac: float
+                      ) -> jnp.ndarray:
+    """Top-⌈frac·S⌉ tokens by attention mass (Eq. 1 → T_imp).
+
+    token_importance: (B, S) or (S,). Returns float mask of same shape.
+    """
+    ti = token_importance
+    s = ti.shape[-1]
+    k = max(1, int(round(frac * s)))
+    thresh = jax.lax.top_k(ti, k)[0][..., -1:]
+    return (ti >= thresh).astype(jnp.float32)
+
+
+def prefill_expert_importance(expert_hh_load: jnp.ndarray,
+                              expert_load: jnp.ndarray,
+                              ) -> jnp.ndarray:
+    """Eq. (2): importance = heavy-hitter token load. Ties between experts
+    with equal heavy-hitter load are broken by total load (Fig. 4 shows the
+    two are highly correlated, so this is a consistent tie-break, not a
+    different criterion)."""
+    total = jnp.maximum(expert_load.sum(), 1.0)
+    return expert_hh_load + expert_load / (total + 1.0)
+
+
+def decode_expert_importance(gate_scores: jnp.ndarray) -> jnp.ndarray:
+    """Eq. (3): importance = gate score. gate_scores: (E,) — for batched
+    decode the caller averages gates over the batch first."""
+    return gate_scores
+
+
+def select_critical(importance: jnp.ndarray, t_l) -> jnp.ndarray:
+    """Top-t_l experts by importance -> bool mask (E,).
+
+    t_l may be a Python int OR a traced scalar (the scan-over-layers path
+    feeds the depth schedule's per-layer counts as a scanned array), so the
+    selection is rank-based rather than lax.top_k(k=static):
+      critical_e ⇔ rank(importance_e) < t_l
+    with ranks dense and ties broken by index (stable, deterministic).
+    """
+    e = importance.shape[-1]
+    t_l = jnp.clip(jnp.asarray(t_l, jnp.int32), 1, e)
+    order = jnp.argsort(-importance)          # descending
+    rank = jnp.zeros((e,), jnp.int32).at[order].set(jnp.arange(e, dtype=jnp.int32))
+    return rank < t_l

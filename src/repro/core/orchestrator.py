@@ -1,0 +1,184 @@
+"""Dynamic Expert Orchestration Engine (paper §4.4) — host-side runtime.
+
+Owns the mixed-precision LRU cache and the look-ahead prefetcher and walks
+the layer timeline of one inference step, producing latency accounting under
+an explicit edge cost model (single DMA queue, PCIe-class bandwidth):
+
+  1. prefetches for layer l were issued during layer l-1 at LOW priority
+     (they occupy the DMA engine only while no demand load is pending —
+     demand misses preempt them, as in real driver-level prefetching);
+  2. at layer-l start, still-missing *required* experts are fetched and
+     compute blocks until they arrive (Wait-for-Weight stall);
+  3. compute runs; prefetch requests for layer l+1 overlap with it
+     (paper Fig. 1, bottom row).
+
+The engine is exact about the paper's precision semantics: Critical experts
+are requested at ``high``; Sub-critical at ``low`` under "4/2" or skipped
+outright under "4/0" (the 0-bit state — no I/O, no compute).
+
+This module is deliberately framework-free (plain Python + numpy inputs) so
+it can be driven either by the real JAX serving engine (routing info from the
+jitted forward) or by the benchmark harness in simulation.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Optional, Sequence
+
+import numpy as np
+
+from repro.core.cache import MixedPrecisionLRUCache
+
+__all__ = ["OrchestratorConfig", "LayerTiming", "StepTiming",
+           "DynamicExpertOrchestrator"]
+
+
+@dataclasses.dataclass(frozen=True)
+class OrchestratorConfig:
+    num_layers: int
+    num_experts: int
+    experts_per_token: int
+    bytes_high: int               # per-expert blob at high precision
+    bytes_low: int                # per-expert blob at low precision
+    vram_budget_bytes: int        # expert-cache byte budget
+    pcie_bw: float = 16e9         # host->device B/s (PCIe Gen3 x16)
+    low_is_skip: bool = False     # "4/0": sub-critical experts are skipped
+    enable_cache: bool = True     # ablation row 1 vs 2
+    enable_prefetch: bool = True  # ablation row 2 vs 3
+    enable_dyquant: bool = True   # False => every expert requested high
+    prefetch_topk: int = 2
+
+
+@dataclasses.dataclass
+class LayerTiming:
+    layer: int
+    stall_s: float                # Wait-for-Weight time on the critical path
+    compute_s: float
+    required_bytes_missed: int
+    prefetch_bytes: int
+    num_high: int
+    num_low: int
+    num_skipped: int
+
+
+@dataclasses.dataclass
+class StepTiming:
+    layers: List[LayerTiming]
+
+    @property
+    def total_s(self) -> float:
+        return sum(l.stall_s + l.compute_s for l in self.layers)
+
+    @property
+    def stall_s(self) -> float:
+        return sum(l.stall_s for l in self.layers)
+
+    @property
+    def compute_s(self) -> float:
+        return sum(l.compute_s for l in self.layers)
+
+    @property
+    def bytes_missed(self) -> int:
+        return sum(l.required_bytes_missed for l in self.layers)
+
+
+class DynamicExpertOrchestrator:
+    def __init__(self, cfg: OrchestratorConfig):
+        self.cfg = cfg
+        capacity = cfg.vram_budget_bytes
+        if not cfg.enable_cache:
+            # load-on-demand: room for exactly one layer's working set, so
+            # with >= 2 layers nothing survives until the same layer recurs
+            # (paper ablation row 1).
+            capacity = cfg.bytes_high * cfg.num_experts
+        self.cache = MixedPrecisionLRUCache(capacity)
+        self._dma_tail = 0.0
+        self._now = 0.0
+
+    # ------------------------------------------------------------------
+    def _bytes(self, precision: str) -> int:
+        return (self.cfg.bytes_high if precision == "high"
+                else self.cfg.bytes_low)
+
+    def _required_precisions(self, critical_mask: np.ndarray,
+                             active: np.ndarray):
+        """Map (critical, active) per expert -> precision request or skip."""
+        out = []
+        for e in range(self.cfg.num_experts):
+            if not active[e]:
+                continue
+            if not self.cfg.enable_dyquant:
+                out.append((e, "high"))
+            elif critical_mask[e]:
+                out.append((e, "high"))
+            elif self.cfg.low_is_skip:
+                out.append((e, None))  # 0-bit: skipped
+            else:
+                out.append((e, "low"))
+        return out
+
+    def step(self, critical_masks: Sequence[np.ndarray],
+             active_masks: Sequence[np.ndarray],
+             predicted_next: Optional[Sequence[np.ndarray]],
+             compute_s_per_layer: Sequence[float]) -> StepTiming:
+        """Walk one forward pass (prefill or a decode step).
+
+        critical_masks / active_masks: per layer, (E,) bool — DyMoE's
+        Critical tier and the set of experts actually routed to.
+        predicted_next: per layer, (E,) predicted demand for layer l+1 from
+        Eq. (6–8) (None disables prefetch).
+        compute_s_per_layer: modeled compute window per layer.
+        """
+        cfg = self.cfg
+        timings: List[LayerTiming] = []
+        for l in range(cfg.num_layers):
+            reqs = self._required_precisions(
+                np.asarray(critical_masks[l]), np.asarray(active_masks[l]))
+            missed = 0
+            n_hi = n_lo = n_skip = 0
+            for e, prec in reqs:
+                if prec is None:
+                    n_skip += 1
+                    continue
+                if prec == "high":
+                    n_hi += 1
+                else:
+                    n_lo += 1
+                _, m = self.cache.get((l, e), prec, nbytes=self._bytes(prec))
+                missed += m
+            # demand loads PREEMPT in-flight prefetch: they are serviced
+            # from `now` directly, and compute blocks on them
+            stall = 0.0
+            if missed:
+                done = self._now + missed / cfg.pcie_bw
+                self._dma_tail = max(self._dma_tail, done)
+                stall = done - self._now
+            self._now += stall
+            compute_start = self._now
+            self._now += compute_s_per_layer[l]
+
+            # look-ahead prefetch for layer l+1 overlaps with this compute
+            pf_bytes = 0
+            if (cfg.enable_prefetch and predicted_next is not None
+                    and l + 1 < cfg.num_layers):
+                pred = np.asarray(predicted_next[l])
+                top = np.argsort(-pred)[:cfg.prefetch_topk]
+                for e in top:
+                    # the paper prefetches *critical* experts, i.e. at high
+                    # precision (§4.4.1 — "prefetch critical weights")
+                    pf_bytes += self.cache.prefetch(
+                        (l + 1, int(e)), "high", nbytes=self._bytes("high"))
+                if pf_bytes:
+                    self._dma_tail = max(self._dma_tail, compute_start) \
+                        + pf_bytes / cfg.pcie_bw
+            timings.append(LayerTiming(
+                layer=l, stall_s=stall,
+                compute_s=compute_s_per_layer[l],
+                required_bytes_missed=missed,
+                prefetch_bytes=pf_bytes,
+                num_high=n_hi, num_low=n_lo, num_skipped=n_skip))
+        return StepTiming(timings)
+
+    def reset_clock(self) -> None:
+        self._now = 0.0
+        self._dma_tail = 0.0

@@ -1,0 +1,58 @@
+"""Look-ahead prefetching (paper §4.4.1, Eq. 6–8).
+
+Inter-layer activation similarity (paper §3.3) makes h^(l) a high-fidelity
+proxy for h^(l+1), so next-layer gate scores are approximated by pushing the
+*current* hidden state through the *next* layer's router:
+
+    ĝ^(l+1) = softmax(h^(l) W_g^(l+1))           (Eq. 6)
+
+Prefill aggregates predicted demand over tokens (Eq. 7, token-frequency
+prefetching); decode prefetches the top-t predicted experts directly (Eq. 8).
+
+In the compiled path these predictions choose the next layer's precision mask
+one layer ahead; in the orchestrated serving path they drive asynchronous
+host→device expert loads that overlap with layer-l compute.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["predict_next_gates", "prefetch_targets", "layer_similarity"]
+
+
+def predict_next_gates(h: jnp.ndarray, next_router_w: jnp.ndarray
+                       ) -> jnp.ndarray:
+    """Eq. (6). h: (T, dm) hidden state entering layer l's FFN;
+    next_router_w: (dm, E) router of layer l+1. Returns (T, E) probs."""
+    return jax.nn.softmax(h.astype(jnp.float32) @ next_router_w, axis=-1)
+
+
+def prefetch_targets(pred_gates: jnp.ndarray, k: int, t: int,
+                     ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Eq. (7)/(8) unified: per-token predicted top-k activations are counted
+    across tokens (prefill, T>1 — token-frequency) and the top-t experts by
+    frequency are prefetched. For decode (T=1) this reduces exactly to
+    Eq. (8)'s direct top-t of ĝ.
+
+    Returns (expert_ids (t,), freq (E,)).
+    """
+    tk, e = pred_gates.shape[-2:]
+    _, idx = jax.lax.top_k(pred_gates, k)                    # (T, k)
+    freq = jax.nn.one_hot(idx, e, dtype=jnp.float32).sum(axis=(0, 1))
+    # tie-break by predicted mass so decode (all counts ∈ {0,1}) picks the
+    # highest-probability experts, matching Eq. (8)
+    freq = freq + pred_gates.mean(axis=0) * 0.5
+    _, top = jax.lax.top_k(freq, min(t, e))
+    return top, freq
+
+
+def layer_similarity(h_l: jnp.ndarray, h_next: jnp.ndarray) -> jnp.ndarray:
+    """Cosine similarity between adjacent-layer activations (paper Fig. 6)."""
+    a = h_l.astype(jnp.float32).reshape(-1, h_l.shape[-1])
+    b = h_next.astype(jnp.float32).reshape(-1, h_next.shape[-1])
+    num = jnp.sum(a * b, axis=-1)
+    den = jnp.linalg.norm(a, axis=-1) * jnp.linalg.norm(b, axis=-1) + 1e-9
+    return (num / den).mean()

@@ -1,0 +1,10 @@
+from repro.data.pipeline import (
+    DataConfig,
+    synthetic_lm_batches,
+    text_file_batches,
+    pack_documents,
+)
+from repro.data.tokenizer import ByteTokenizer
+
+__all__ = ["DataConfig", "synthetic_lm_batches", "text_file_batches",
+           "pack_documents", "ByteTokenizer"]

@@ -1,0 +1,3 @@
+from repro.kernels.attn_scores.ops import flash_attention_with_scores
+
+__all__ = ["flash_attention_with_scores"]

@@ -1,0 +1,165 @@
+"""Flash attention with per-key attention-mass accumulation (Pallas, TPU).
+
+DyMoE Eq. (1) needs the *column sums* of the softmax attention matrix — how
+much attention each token receives — which standard flash attention never
+materializes. We compute it in two streaming passes so the S×S matrix never
+exists:
+
+  Pass A (grid: heads × Q-blocks × KV-blocks, KV innermost):
+      classic online-softmax flash forward; emits the output AND the
+      per-query log-sum-exp (LSE).
+  Pass B (grid: heads × KV-blocks × Q-blocks, Q innermost):
+      mass_j = Σ_i exp(s_ij − lse_i) — with the LSE known, the normalized
+      probability of any (i, j) cell is re-computable independently, so
+      column sums stream over Q blocks with a VMEM accumulator.
+
+Both passes tile Q/K/V into (block, head_dim) VMEM blocks; head_dim is the
+MXU lane dim (≥128-aligned for real models).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+__all__ = ["flash_fwd_pallas", "key_mass_pallas"]
+
+_NEG_INF = -1e30
+
+
+def _fwd_kernel(q_ref, k_ref, v_ref, o_ref, lse_ref,
+                m_scr, l_scr, acc_scr, *, scale, causal, block_q, block_k, nk):
+    kk = pl.program_id(2)
+
+    @pl.when(kk == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, _NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q = q_ref[0].astype(jnp.float32)  # (bq, d)
+    k = k_ref[0].astype(jnp.float32)  # (bk, d)
+    v = v_ref[0].astype(jnp.float32)  # (bk, d)
+    s = jnp.dot(q, k.T, preferred_element_type=jnp.float32) * scale
+
+    if causal:
+        qi = pl.program_id(1) * block_q + jax.lax.broadcasted_iota(
+            jnp.int32, (block_q, block_k), 0)
+        kj = kk * block_k + jax.lax.broadcasted_iota(
+            jnp.int32, (block_q, block_k), 1)
+        s = jnp.where(qi >= kj, s, _NEG_INF)
+
+    m_prev = m_scr[...]                       # (bq, 1)
+    m_cur = jnp.max(s, axis=-1, keepdims=True)
+    m_new = jnp.maximum(m_prev, m_cur)
+    p = jnp.exp(s - m_new)                    # (bq, bk)
+    alpha = jnp.exp(m_prev - m_new)           # (bq, 1)
+    l_scr[...] = l_scr[...] * alpha + p.sum(axis=-1, keepdims=True)
+    acc_scr[...] = acc_scr[...] * alpha + jnp.dot(
+        p, v, preferred_element_type=jnp.float32)
+    m_scr[...] = m_new
+
+    @pl.when(kk == nk - 1)
+    def _done():
+        l = l_scr[...]
+        safe_l = jnp.where(l == 0.0, 1.0, l)
+        o_ref[0] = (acc_scr[...] / safe_l).astype(o_ref.dtype)
+        # lse = m + log l; rows with no visible keys get -inf mass later.
+        lse_ref[0] = jnp.where(
+            l[:, 0] == 0.0, _NEG_INF, m_scr[:, 0] + jnp.log(safe_l[:, 0]))
+
+
+def _mass_kernel(q_ref, k_ref, lse_ref, mass_ref, acc_scr,
+                 *, scale, causal, block_q, block_k, nq):
+    qq = pl.program_id(2)
+
+    @pl.when(qq == 0)
+    def _init():
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q = q_ref[0].astype(jnp.float32)          # (bq, d)
+    k = k_ref[0].astype(jnp.float32)          # (bk, d)
+    lse = lse_ref[0]                          # (bq,)
+    s = jnp.dot(q, k.T, preferred_element_type=jnp.float32) * scale
+    if causal:
+        qi = qq * block_q + jax.lax.broadcasted_iota(
+            jnp.int32, (block_q, block_k), 0)
+        kj = pl.program_id(1) * block_k + jax.lax.broadcasted_iota(
+            jnp.int32, (block_q, block_k), 1)
+        s = jnp.where(qi >= kj, s, _NEG_INF)
+    p = jnp.exp(s - lse[:, None])             # normalized probs
+    acc_scr[...] += p.sum(axis=0)             # (bk,)
+
+    @pl.when(qq == nq - 1)
+    def _done():
+        mass_ref[0] = acc_scr[...].astype(mass_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "causal", "block_q", "block_k", "interpret"))
+def flash_fwd_pallas(q, k, v, *, causal=True, block_q=128, block_k=128,
+                     interpret=False):
+    """q,k,v: (H, S, D). Returns out (H, S, D) f32 and lse (H, S) f32."""
+    h, s, d = q.shape
+    bq, bk = min(block_q, s), min(block_k, s)
+    assert s % bq == 0 and s % bk == 0
+    nq, nk = s // bq, s // bk
+    scale = 1.0 / (d ** 0.5)
+    kern = functools.partial(_fwd_kernel, scale=scale, causal=causal,
+                             block_q=bq, block_k=bk, nk=nk)
+    out, lse = pl.pallas_call(
+        kern,
+        grid=(h, nq, nk),
+        in_specs=[
+            pl.BlockSpec((1, bq, d), lambda hh, qq, kk: (hh, qq, 0)),
+            pl.BlockSpec((1, bk, d), lambda hh, qq, kk: (hh, kk, 0)),
+            pl.BlockSpec((1, bk, d), lambda hh, qq, kk: (hh, kk, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, bq, d), lambda hh, qq, kk: (hh, qq, 0)),
+            pl.BlockSpec((1, bq), lambda hh, qq, kk: (hh, qq)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((h, s, d), jnp.float32),
+            jax.ShapeDtypeStruct((h, s), jnp.float32),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((bq, 1), jnp.float32),
+            pltpu.VMEM((bq, 1), jnp.float32),
+            pltpu.VMEM((bq, d), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v)
+    return out, lse
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "causal", "block_q", "block_k", "interpret"))
+def key_mass_pallas(q, k, lse, *, causal=True, block_q=128, block_k=128,
+                    interpret=False):
+    """Per-key received attention mass. q,k: (H, S, D); lse: (H, S).
+
+    Returns mass (H, S) f32 with mass_j = Σ_i p_ij.
+    """
+    h, s, d = q.shape
+    bq, bk = min(block_q, s), min(block_k, s)
+    nq, nk = s // bq, s // bk
+    scale = 1.0 / (d ** 0.5)
+    kern = functools.partial(_mass_kernel, scale=scale, causal=causal,
+                             block_q=bq, block_k=bk, nq=nq)
+    return pl.pallas_call(
+        kern,
+        grid=(h, nk, nq),
+        in_specs=[
+            pl.BlockSpec((1, bq, d), lambda hh, kk, qq: (hh, qq, 0)),
+            pl.BlockSpec((1, bk, d), lambda hh, kk, qq: (hh, kk, 0)),
+            pl.BlockSpec((1, bq), lambda hh, kk, qq: (hh, qq)),
+        ],
+        out_specs=pl.BlockSpec((1, bk), lambda hh, kk, qq: (hh, kk)),
+        out_shape=jax.ShapeDtypeStruct((h, s), jnp.float32),
+        scratch_shapes=[pltpu.VMEM((bk,), jnp.float32)],
+        interpret=interpret,
+    )(q, k, lse)

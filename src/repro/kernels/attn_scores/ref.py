@@ -1,0 +1,39 @@
+"""Pure-jnp oracle for flash_attention_with_scores.
+
+Computes standard (optionally causal) softmax attention AND the per-key
+received-attention mass used by DyMoE Eq. (1):
+
+    mass_j = sum_i softmax(q_i k^T / sqrt(d))_{ij}
+
+averaged over heads by the caller (ops.py exposes both granularities).
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+__all__ = ["attention_with_scores_ref"]
+
+
+def attention_with_scores_ref(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
+                              *, causal: bool = True):
+    """q,k,v: (H, S, D) single sequence, head-major.
+
+    Returns (out (H, S, D) f32, mass (H, S) f32).
+    """
+    h, s, d = q.shape
+    scale = 1.0 / jnp.sqrt(jnp.asarray(d, jnp.float32))
+    logits = jnp.einsum("hqd,hkd->hqk", q.astype(jnp.float32),
+                        k.astype(jnp.float32)) * scale
+    if causal:
+        mask = jnp.tril(jnp.ones((s, s), bool))
+        logits = jnp.where(mask[None], logits, -jnp.inf)
+    p = _softmax(logits)
+    out = jnp.einsum("hqk,hkd->hqd", p, v.astype(jnp.float32))
+    mass = p.sum(axis=1)  # sum over queries -> (H, S_k)
+    return out, mass
+
+
+def _softmax(x):
+    m = jnp.max(x, axis=-1, keepdims=True)
+    e = jnp.exp(x - m)
+    return e / jnp.sum(e, axis=-1, keepdims=True)

@@ -1,0 +1,3 @@
+from repro.kernels.quant_matmul.ops import quant_matmul
+
+__all__ = ["quant_matmul"]

@@ -1,0 +1,53 @@
+"""Public jit'd wrapper for the fused dequant-matmul.
+
+``quant_matmul`` accepts a :class:`repro.quant.QuantizedTensor` (or raw
+packed/scales arrays) and dispatches to the Pallas kernel on TPU (or in
+interpret mode when requested) with a pure-jnp fallback — the fallback is
+the default on CPU so the whole framework runs everywhere, while the kernel
+is exercised by the kernel test-suite in interpret mode and targets TPU.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.quant_matmul.quant_matmul import quant_matmul_pallas
+from repro.kernels.quant_matmul.ref import quant_matmul_ref
+from repro.quant.qtensor import QuantizedTensor
+
+__all__ = ["quant_matmul"]
+
+
+def _on_tpu() -> bool:
+    try:
+        return jax.default_backend() == "tpu"
+    except RuntimeError:  # pragma: no cover
+        return False
+
+
+def quant_matmul(x: jnp.ndarray, qt: QuantizedTensor, *,
+                 impl: Optional[str] = None, interpret: bool = False,
+                 block_m: int = 128, block_n: int = 128, block_k: int = 512,
+                 out_dtype=jnp.bfloat16) -> jnp.ndarray:
+    """``y = x @ dequant(qt)`` with x of shape (..., K).
+
+    impl: "pallas" | "ref" | None (auto: pallas on TPU, ref elsewhere).
+    """
+    if impl is None:
+        impl = "pallas" if _on_tpu() else "ref"
+    lead = x.shape[:-1]
+    k = x.shape[-1]
+    x2 = x.reshape(-1, k)
+    if impl == "pallas":
+        y = quant_matmul_pallas(
+            x2, qt.packed, qt.scales, bits=qt.bits, group_size=qt.group_size,
+            block_m=block_m, block_n=block_n, block_k=block_k,
+            interpret=interpret, out_dtype=out_dtype)
+    elif impl == "ref":
+        y = quant_matmul_ref(x2, qt.packed, qt.scales, bits=qt.bits,
+                             group_size=qt.group_size, out_dtype=out_dtype)
+    else:
+        raise ValueError(f"unknown impl {impl!r}")
+    return y.reshape(*lead, -1)

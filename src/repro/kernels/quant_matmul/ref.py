@@ -1,0 +1,17 @@
+"""Pure-jnp oracle for the quant_matmul kernel."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.quant.quantize import dequantize_tensor
+
+__all__ = ["quant_matmul_ref"]
+
+
+def quant_matmul_ref(x: jnp.ndarray, packed: jnp.ndarray, scales: jnp.ndarray,
+                     *, bits: int, group_size: int,
+                     out_dtype=jnp.bfloat16) -> jnp.ndarray:
+    """y = x @ dequant(W). x: (M, K); packed: (N, K/vpb); scales: (K/gs, N)."""
+    w = dequantize_tensor(packed, scales, bits, group_size, jnp.float32)
+    return jnp.dot(x.astype(jnp.float32), w,
+                   preferred_element_type=jnp.float32).astype(out_dtype)

@@ -1,0 +1,62 @@
+"""Serving launcher: DyMoE-orchestrated generation with edge-latency
+accounting.
+
+  PYTHONPATH=src python -m repro.launch.serve --arch olmoe-1b-7b \
+      --vram-gb 16 --mode 4/2 --prompt-len 64 --max-new 32
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import json
+
+import jax
+
+from repro.configs import get_config
+from repro.models import init_params
+from repro.models.config import DyMoEPolicy
+from repro.serving import DyMoEEngine, EngineConfig, Request
+from repro.serving.cost_model import EdgeProfile
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="olmoe-1b-7b")
+    ap.add_argument("--vram-gb", type=int, default=16)
+    ap.add_argument("--mode", choices=["4/2", "4/0", "off"], default="4/2")
+    ap.add_argument("--retention", type=float, default=0.75)
+    ap.add_argument("--prompt-len", type=int, default=64)
+    ap.add_argument("--max-new", type=int, default=32)
+    ap.add_argument("--reduced", action="store_true", default=True)
+    ap.add_argument("--full", dest="reduced", action="store_false")
+    ap.add_argument("--no-cache", action="store_true")
+    ap.add_argument("--no-prefetch", action="store_true")
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch)
+    if args.reduced:
+        cfg = cfg.reduced()
+    pol = DyMoEPolicy(
+        enabled=args.mode != "off",
+        low_bits=0 if args.mode == "4/0" else 2,
+        retention=args.retention)
+    cfg = dataclasses.replace(cfg, dymoe=pol)
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    engine = DyMoEEngine(cfg, params, EngineConfig(
+        profile=EdgeProfile().with_vram(args.vram_gb),
+        use_dymoe=args.mode != "off",
+        enable_cache=not args.no_cache,
+        enable_prefetch=not args.no_prefetch,
+        enable_dyquant=args.mode != "off"))
+    prompt = list(range(1, args.prompt_len + 1))
+    res = engine.generate(Request(prompt_tokens=prompt,
+                                  max_new_tokens=args.max_new))
+    print(json.dumps(dict(
+        arch=cfg.name, mode=args.mode, vram_gb=args.vram_gb,
+        ttft_ms=res.ttft_s * 1e3, tpot_ms=res.tpot_s * 1e3,
+        wall_s=res.wall_s, tokens=res.tokens[:16],
+        cache=res.cache_stats), indent=2))
+
+
+if __name__ == "__main__":
+    main()

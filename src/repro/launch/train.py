@@ -1,0 +1,46 @@
+"""Training launcher.
+
+  PYTHONPATH=src python -m repro.launch.train --arch olmoe-1b-7b \
+      --steps 200 --batch-size 8 --seq-len 256 [--reduced]
+
+``--reduced`` trains the CPU-scale variant of the arch (the default on this
+container); the full config is intended for the real TPU mesh.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+
+from repro.configs import ARCH_IDS, get_config
+from repro.data import DataConfig, synthetic_lm_batches
+from repro.training import TrainLoop, TrainLoopConfig
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="olmoe-1b-7b")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch-size", type=int, default=8)
+    ap.add_argument("--seq-len", type=int, default=256)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--reduced", action="store_true", default=True)
+    ap.add_argument("--full", dest="reduced", action="store_false")
+    ap.add_argument("--checkpoint-dir", default=None)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch)
+    if args.reduced:
+        cfg = cfg.reduced()
+    loop = TrainLoop(cfg, TrainLoopConfig(
+        steps=args.steps, lr=args.lr, checkpoint_dir=args.checkpoint_dir,
+        seed=args.seed))
+    batches = synthetic_lm_batches(DataConfig(
+        batch_size=args.batch_size, seq_len=args.seq_len,
+        vocab_size=cfg.vocab_size, seed=args.seed))
+    result = loop.run(batches, callback=lambda i, m: print(
+        f"step {i:5d}  loss {m['loss']:.4f}  ce {m['ce']:.4f}"))
+    print(json.dumps(result))
+
+
+if __name__ == "__main__":
+    main()

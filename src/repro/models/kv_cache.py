@@ -1,0 +1,100 @@
+"""Decode-time state: full KV cache, ring-buffer (sliding-window) KV cache,
+and SSM recurrent state. All pytrees with static shapes.
+
+The ring cache is what makes ``long_500k`` sub-quadratic for attention
+architectures: a window of W slots is overwritten cyclically; each slot
+remembers the absolute position it holds so masking stays exact.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["KVCache", "SSMCache", "init_kv_cache", "update_kv_cache"]
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class KVCache:
+    """k/v: (B, H_kv, S_slots, D). positions: (B, S_slots) absolute position
+    held by each slot (-1 = empty). length: (B,) tokens seen so far.
+    ring: static flag — True means S_slots is a sliding window.
+    """
+
+    k: jnp.ndarray
+    v: jnp.ndarray
+    positions: jnp.ndarray
+    length: jnp.ndarray
+    ring: bool = dataclasses.field(metadata=dict(static=True), default=False)
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class SSMCache:
+    """conv_state: (B, d_inner(+extra), conv_width-1); ssm_state: mamba1
+    (B, d_inner, N) or mamba2 (B, heads, head_dim, N); length: (B,)."""
+
+    conv_state: jnp.ndarray
+    ssm_state: jnp.ndarray
+    length: jnp.ndarray
+
+
+def init_kv_cache(batch: int, num_kv_heads: int, slots: int, head_dim: int,
+                  dtype=jnp.bfloat16, ring: bool = False) -> KVCache:
+    return KVCache(
+        k=jnp.zeros((batch, num_kv_heads, slots, head_dim), dtype),
+        v=jnp.zeros((batch, num_kv_heads, slots, head_dim), dtype),
+        positions=jnp.full((batch, slots), -1, jnp.int32),
+        length=jnp.zeros((batch,), jnp.int32),
+        ring=ring,
+    )
+
+
+def update_kv_cache(cache: KVCache, k_new: jnp.ndarray, v_new: jnp.ndarray
+                    ) -> KVCache:
+    """Insert one decode step. k_new/v_new: (B, H_kv, 1, D)."""
+    b, _, slots, _ = cache.k.shape
+    pos = cache.length  # (B,) absolute position of the incoming token
+    slot = pos % slots if cache.ring else jnp.minimum(pos, slots - 1)
+    bidx = jnp.arange(b)
+    k = cache.k.at[bidx, :, slot].set(k_new[:, :, 0].astype(cache.k.dtype))
+    v = cache.v.at[bidx, :, slot].set(v_new[:, :, 0].astype(cache.v.dtype))
+    positions = cache.positions.at[bidx, slot].set(pos)
+    return KVCache(k=k, v=v, positions=positions, length=cache.length + 1,
+                   ring=cache.ring)
+
+
+def fill_kv_cache(cache: KVCache, k_seq: jnp.ndarray, v_seq: jnp.ndarray,
+                  lengths: Optional[jnp.ndarray] = None) -> KVCache:
+    """Bulk insert a prefill sequence starting at absolute position 0.
+    k_seq/v_seq: (B, H_kv, S, D). For ring caches with S > slots only the
+    trailing ``slots`` keys are kept (the sliding window semantics); slot
+    layout matches ``update_kv_cache``'s ``pos % slots`` rule so decode can
+    continue seamlessly."""
+    b, h, s, d = k_seq.shape
+    slots = cache.k.shape[2]
+    if s > slots:
+        assert cache.ring, (s, slots)
+        keep = slots
+        abs_pos = jnp.arange(s - keep, s, dtype=jnp.int32)       # kept keys
+        slot_of = abs_pos % slots
+        k = cache.k.at[:, :, slot_of].set(
+            k_seq[:, :, -keep:].astype(cache.k.dtype))
+        v = cache.v.at[:, :, slot_of].set(
+            v_seq[:, :, -keep:].astype(cache.v.dtype))
+        positions = jnp.zeros_like(cache.positions).at[:, slot_of].set(
+            abs_pos[None, :])
+        length = jnp.full((b,), s, jnp.int32)
+        return KVCache(k=k, v=v, positions=positions, length=length,
+                       ring=True)
+    k = cache.k.at[:, :, :s].set(k_seq.astype(cache.k.dtype))
+    v = cache.v.at[:, :, :s].set(v_seq.astype(cache.v.dtype))
+    if lengths is None:
+        lengths = jnp.full((b,), s, jnp.int32)
+    pos = jnp.arange(slots, dtype=jnp.int32)[None, :]
+    positions = jnp.where(pos < lengths[:, None], pos, -1)
+    return KVCache(k=k, v=v, positions=positions, length=lengths,
+                   ring=cache.ring)

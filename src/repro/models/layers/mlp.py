@@ -1,0 +1,67 @@
+"""Dense FFN blocks: SwiGLU (Llama/Qwen/Phi family) and GELU (MusicGen).
+
+Dense FFNs also participate in DyMoE's *depth-aware precision schedule* on
+non-MoE architectures (DESIGN.md §Arch-applicability): ``mlp_quantized``
+evaluates the FFN from a mixed-precision weight pair selected by a scalar
+per-layer criticality flag.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig
+from repro.quant.qtensor import MixedPrecisionWeights
+
+__all__ = ["init_mlp", "mlp", "quantize_mlp", "mlp_quantized"]
+
+
+def init_mlp(cfg: ModelConfig, key, dtype) -> dict:
+    dm, dff = cfg.d_model, cfg.d_ff
+    ks = jax.random.split(key, 3)
+    p = {
+        "w_up": (jax.random.normal(ks[0], (dm, dff)) * dm ** -0.5).astype(dtype),
+        "w_down": (jax.random.normal(ks[1], (dff, dm)) * dff ** -0.5
+                   ).astype(dtype),
+    }
+    if cfg.mlp_type == "swiglu":
+        p["w_gate"] = (jax.random.normal(ks[2], (dm, dff)) * dm ** -0.5
+                       ).astype(dtype)
+    return p
+
+
+def mlp(p, cfg: ModelConfig, x: jnp.ndarray) -> jnp.ndarray:
+    if cfg.mlp_type == "swiglu":
+        h = jax.nn.silu(x @ p["w_gate"]) * (x @ p["w_up"])
+    else:
+        h = jax.nn.gelu(x @ p["w_up"])
+    return h @ p["w_down"]
+
+
+def quantize_mlp(p, cfg: ModelConfig) -> dict:
+    """Build mixed-precision variants of every FFN matrix."""
+    pol = cfg.dymoe
+    low = pol.low_bits or None
+    return {name: MixedPrecisionWeights.build(w, pol.high_bits, low,
+                                              pol.group_size)
+            for name, w in p.items()}
+
+
+def mlp_quantized(qp, cfg: ModelConfig, x: jnp.ndarray,
+                  critical: jnp.ndarray) -> jnp.ndarray:
+    """FFN from quantized weights; ``critical`` is a scalar bool (depth-aware
+    layer tier). High precision when critical, low (or identity-skip for
+    "x/0") otherwise.
+    """
+    def pick(mp: MixedPrecisionWeights):
+        hi = mp.high.dequantize(x.dtype)
+        if mp.low is None:
+            return jnp.where(critical, 1.0, 0.0).astype(x.dtype) * hi
+        lo = mp.low.dequantize(x.dtype)
+        return jnp.where(critical, hi, lo)
+
+    if cfg.mlp_type == "swiglu":
+        h = jax.nn.silu(x @ pick(qp["w_gate"])) * (x @ pick(qp["w_up"]))
+    else:
+        h = jax.nn.gelu(x @ pick(qp["w_up"]))
+    return h @ pick(qp["w_down"])

@@ -1,0 +1,239 @@
+"""Mixture-of-Experts layer with sort-based capacity dispatch and DyMoE
+mixed-precision expert execution.
+
+Dispatch is scatter/gather based (no (T, E, C) one-hot einsum) so the HLO
+FLOP count reflects *active* compute — essential for honest rooflines:
+tokens are routed top-k, assigned a position inside their expert's capacity
+buffer via a cumulative count, scattered to an (E, C, d) buffer, processed by
+vmapped expert FFNs, and gathered back weighted by their gates.
+
+DyMoE integration (paper §4):
+  * ``critical_mask`` (E,) selects per-expert precision at runtime —
+    high-bit for Critical experts, low-bit or skip ("0-bit") for
+    Sub-critical ones (paper §4.3/§5).
+  * The returned :class:`MoEStats` carries the per-expert token load,
+    heavy-hitter token load (Eq. 2) and mean gate score (Eq. 3) consumed by
+    the importance estimator, plus router logits for the look-ahead
+    prefetcher (Eq. 6).
+Shared experts (Qwen2-MoE) are always-active ⇒ always Critical (they are
+selected by every token), so they run in high precision unconditionally.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig
+from repro.quant.qtensor import MixedPrecisionWeights
+
+__all__ = ["init_moe", "moe_apply", "moe_apply_sharded", "quantize_moe",
+           "MoEStats"]
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class MoEStats:
+    """Per-layer routing statistics consumed by DyMoE core."""
+
+    router_logits: jnp.ndarray      # (T, E)
+    expert_load: jnp.ndarray        # (E,) token count routed to each expert
+    expert_hh_load: jnp.ndarray     # (E,) heavy-hitter token count (Eq. 2)
+    gate_mean: jnp.ndarray          # (E,) mean gate score over routed tokens
+    aux_loss: jnp.ndarray           # scalar: load-balance + z-loss
+    dropped_frac: jnp.ndarray       # scalar: fraction of (token, k) dropped
+
+
+def init_moe(cfg: ModelConfig, key, dtype) -> dict:
+    dm, dff, e = cfg.d_model, cfg.expert_d_ff, cfg.num_experts
+    ks = jax.random.split(key, 7)
+    p = {
+        "wg_router": (jax.random.normal(ks[0], (dm, e)) * dm ** -0.5
+                      ).astype(jnp.float32),
+        "w_gate": (jax.random.normal(ks[1], (e, dm, dff)) * dm ** -0.5
+                   ).astype(dtype),
+        "w_up": (jax.random.normal(ks[2], (e, dm, dff)) * dm ** -0.5
+                 ).astype(dtype),
+        "w_down": (jax.random.normal(ks[3], (e, dff, dm)) * dff ** -0.5
+                   ).astype(dtype),
+    }
+    if cfg.num_shared_experts:
+        se, sdff = cfg.num_shared_experts, cfg.expert_d_ff
+        p["shared_w_gate"] = (jax.random.normal(ks[4], (se, dm, sdff))
+                              * dm ** -0.5).astype(dtype)
+        p["shared_w_up"] = (jax.random.normal(ks[5], (se, dm, sdff))
+                            * dm ** -0.5).astype(dtype)
+        p["shared_w_down"] = (jax.random.normal(ks[6], (se, sdff, dm))
+                              * sdff ** -0.5).astype(dtype)
+    return p
+
+
+def quantize_moe(p, cfg: ModelConfig) -> dict:
+    """Mixed-precision variants of the routed expert weights (paper §5:
+    quantization focuses exclusively on expert layers). Router and shared
+    experts stay in working precision."""
+    pol = cfg.dymoe
+    low = pol.low_bits or None
+    return {
+        name: MixedPrecisionWeights.build(p[name], pol.high_bits, low,
+                                          pol.group_size)
+        for name in ("w_gate", "w_up", "w_down")
+    }
+
+
+def _capacity(cfg: ModelConfig, t: int) -> int:
+    c = int(cfg.capacity_factor * t * cfg.num_experts_per_tok
+            / cfg.num_experts)
+    return max(8, min(t, c))
+
+
+def _expert_ffn(w_gate, w_up, w_down, xb: jnp.ndarray) -> jnp.ndarray:
+    """xb: (E, C, dm) -> (E, C, dm) via per-expert SwiGLU."""
+    h = jax.nn.silu(jnp.einsum("ecd,edf->ecf", xb, w_gate))
+    h = h * jnp.einsum("ecd,edf->ecf", xb, w_up)
+    return jnp.einsum("ecf,efd->ecd", h, w_down)
+
+
+def _select_weights(qw: dict, name: str, critical: jnp.ndarray, dtype):
+    """Per-expert precision selection. critical: (E,) bool."""
+    mp: MixedPrecisionWeights = qw[name]
+    hi = mp.high.dequantize(dtype)                      # (E, a, b)
+    cmask = critical.reshape(-1, 1, 1)
+    if mp.low is None:  # "4/0": sub-critical experts are skipped outright
+        return jnp.where(cmask, hi, jnp.zeros_like(hi))
+    lo = mp.low.dequantize(dtype)
+    return jnp.where(cmask, hi, lo)
+
+
+def moe_apply(p, cfg: ModelConfig, x: jnp.ndarray, *,
+              hh_mask: Optional[jnp.ndarray] = None,
+              critical_mask: Optional[jnp.ndarray] = None,
+              qweights: Optional[dict] = None,
+              ) -> Tuple[jnp.ndarray, MoEStats]:
+    """Apply the MoE layer to flattened tokens.
+
+    Args:
+      x: (T, dm) tokens.
+      hh_mask: (T,) float/bool heavy-hitter indicator for Eq. (2) stats.
+      critical_mask: (E,) bool — DyMoE precision selection; requires
+        ``qweights``. None ⇒ full-precision (training) path.
+      qweights: output of :func:`quantize_moe`.
+    Returns:
+      (y (T, dm), MoEStats)
+    """
+    t, dm = x.shape
+    e, k = cfg.num_experts, cfg.num_experts_per_tok
+    c = _capacity(cfg, t)
+
+    logits = x.astype(jnp.float32) @ p["wg_router"]      # (T, E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gates, idx = jax.lax.top_k(probs, k)                 # (T, k)
+    gates = gates / jnp.maximum(gates.sum(-1, keepdims=True), 1e-9)
+
+    flat_e = idx.reshape(-1)                             # (T*k,)
+    oh = jax.nn.one_hot(flat_e, e, dtype=jnp.int32)      # (T*k, E)
+    pos = jnp.cumsum(oh, axis=0) - 1                     # running count
+    pos_in_e = jnp.take_along_axis(pos, flat_e[:, None], axis=1)[:, 0]
+    keep = pos_in_e < c
+    slot = jnp.clip(pos_in_e, 0, c - 1)
+
+    tok = jnp.repeat(jnp.arange(t), k)                   # (T*k,)
+    xb = jnp.where(keep[:, None], x[tok], 0)
+    buf = jnp.zeros((e, c, dm), x.dtype).at[flat_e, slot].add(
+        xb.astype(x.dtype), mode="drop")
+
+    if critical_mask is not None:
+        assert qweights is not None
+        wg = _select_weights(qweights, "w_gate", critical_mask, x.dtype)
+        wu = _select_weights(qweights, "w_up", critical_mask, x.dtype)
+        wd = _select_weights(qweights, "w_down", critical_mask, x.dtype)
+    else:
+        wg, wu, wd = p["w_gate"], p["w_up"], p["w_down"]
+    yb = _expert_ffn(wg, wu, wd, buf)                    # (E, C, dm)
+
+    ye = yb[flat_e, slot]                                # (T*k, dm)
+    ye = jnp.where(keep[:, None], ye, 0) * gates.reshape(-1, 1).astype(x.dtype)
+    y = ye.reshape(t, k, dm).sum(axis=1)
+
+    if cfg.num_shared_experts:
+        hs = jax.nn.silu(jnp.einsum("td,edf->etf", x, p["shared_w_gate"]))
+        hs = hs * jnp.einsum("td,edf->etf", x, p["shared_w_up"])
+        y = y + jnp.einsum("etf,efd->td", hs, p["shared_w_down"])
+
+    # ----- statistics / losses -----
+    onehot_top = jax.nn.one_hot(idx, e, dtype=jnp.float32)   # (T, k, E)
+    load = onehot_top.sum(axis=(0, 1))                       # (E,)
+    frac_tokens = load / jnp.maximum(load.sum(), 1.0)
+    frac_probs = probs.mean(axis=0)
+    lb_loss = e * jnp.sum(frac_tokens * frac_probs)
+    z_loss = jnp.mean(jax.nn.logsumexp(logits, axis=-1) ** 2)
+    aux = cfg.router_aux_coef * lb_loss + cfg.router_z_coef * z_loss
+
+    if hh_mask is None:
+        hh_mask = jnp.zeros((t,), jnp.float32)
+    hh_load = jnp.einsum("tke,t->e", onehot_top, hh_mask.astype(jnp.float32))
+    gate_sum = jnp.einsum("tke,tk->e", onehot_top, gates.astype(jnp.float32))
+    gate_mean = gate_sum / jnp.maximum(load, 1.0)
+
+    stats = MoEStats(
+        router_logits=logits,
+        expert_load=load,
+        expert_hh_load=hh_load,
+        gate_mean=gate_mean,
+        aux_loss=aux,
+        dropped_frac=1.0 - keep.mean(),
+    )
+    return y, stats
+
+
+def moe_apply_sharded(p, cfg: ModelConfig, x: jnp.ndarray, *,
+                      hh_mask: Optional[jnp.ndarray] = None,
+                      critical_mask: Optional[jnp.ndarray] = None,
+                      qweights: Optional[dict] = None,
+                      ) -> Tuple[jnp.ndarray, MoEStats]:
+    """Data-local MoE dispatch (§Perf hillclimb A2).
+
+    The plain scatter-based dispatch builds one GLOBAL (E, C, dm) capacity
+    buffer; its token-derived C dim cannot be partitioned by GSPMD, so every
+    model shard chews through global capacity (~data_shards x the useful
+    FLOPs). Here tokens are reshaped to (D, T/D, dm) with D pinned to the
+    data(-and-pod) mesh axes by a sharding constraint, and the whole
+    dispatch-compute-combine runs under vmap — each data shard dispatches
+    only ITS tokens, restoring per-device FLOPs to the active-expert count.
+
+    Falls back to :func:`moe_apply` when ``cfg.moe_dispatch_shards`` <= 1 or
+    does not divide the token count.
+    """
+    d = cfg.moe_dispatch_shards
+    t = x.shape[0]
+    if d <= 1 or t % d != 0:
+        return moe_apply(p, cfg, x, hh_mask=hh_mask,
+                         critical_mask=critical_mask, qweights=qweights)
+    xs = x.reshape(d, t // d, -1)
+    if cfg.moe_dispatch_axes:
+        from jax.sharding import PartitionSpec as P
+        u = P.UNCONSTRAINED
+        xs = jax.lax.with_sharding_constraint(
+            xs, P(tuple(cfg.moe_dispatch_axes), u, u))
+    hh = hh_mask.reshape(d, t // d) if hh_mask is not None else None
+
+    def one(xi, hhi):
+        return moe_apply(p, cfg, xi, hh_mask=hhi,
+                         critical_mask=critical_mask, qweights=qweights)
+
+    if hh is None:
+        y, st = jax.vmap(lambda xi: moe_apply(
+            p, cfg, xi, critical_mask=critical_mask, qweights=qweights))(xs)
+    else:
+        y, st = jax.vmap(one)(xs, hh)
+    stats = MoEStats(
+        router_logits=st.router_logits.reshape(t, -1),
+        expert_load=st.expert_load.sum(0),
+        expert_hh_load=st.expert_hh_load.sum(0),
+        gate_mean=st.gate_mean.mean(0),
+        aux_loss=st.aux_loss.mean(),
+        dropped_frac=st.dropped_frac.mean(),
+    )
+    return y.reshape(t, -1), stats

@@ -1,0 +1,32 @@
+"""Normalization layers (functional)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+__all__ = ["init_rmsnorm", "rmsnorm", "init_layernorm", "layernorm"]
+
+
+def init_rmsnorm(dim: int, dtype=jnp.float32):
+    return {"scale": jnp.ones((dim,), dtype)}
+
+
+def rmsnorm(params, x: jnp.ndarray, eps: float = 1e-5) -> jnp.ndarray:
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(x * x, axis=-1, keepdims=True)
+    y = x * (var + eps) ** -0.5
+    return (y * params["scale"].astype(jnp.float32)).astype(dt)
+
+
+def init_layernorm(dim: int, dtype=jnp.float32):
+    return {"scale": jnp.ones((dim,), dtype), "bias": jnp.zeros((dim,), dtype)}
+
+
+def layernorm(params, x: jnp.ndarray, eps: float = 1e-5) -> jnp.ndarray:
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.var(x, axis=-1, keepdims=True)
+    y = (x - mu) * (var + eps) ** -0.5
+    return (y * params["scale"].astype(jnp.float32)
+            + params["bias"].astype(jnp.float32)).astype(dt)

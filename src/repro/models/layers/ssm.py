@@ -1,0 +1,284 @@
+"""Selective state-space blocks: Mamba1 (falcon-mamba) and Mamba2 (zamba2).
+
+Prefill uses ``jax.lax.associative_scan`` over the linear recurrence
+``h_t = a_t * h_{t-1} + b_t`` (parallel over time, TPU-friendly); decode is a
+single recurrence update against an :class:`SSMCache`. The causal depthwise
+conv is expressed as a sum of shifted slices (width 4), with the last
+``conv-1`` inputs kept in the cache for decoding.
+
+These architectures are attention-free: DyMoE's token-guided/gate-guided
+importance has no router to read (DESIGN.md §Arch-applicability); only the
+depth-aware precision schedule applies, to the in/out projections.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig
+from repro.models.kv_cache import SSMCache
+from repro.models.layers.norms import init_rmsnorm, rmsnorm
+
+__all__ = [
+    "init_mamba",
+    "mamba_prefill",
+    "mamba_decode",
+    "init_ssm_cache",
+]
+
+
+# ---------------------------------------------------------------- init
+
+
+def init_mamba(cfg: ModelConfig, key, dtype) -> dict:
+    if cfg.ssm_version == 1:
+        return _init_mamba1(cfg, key, dtype)
+    return _init_mamba2(cfg, key, dtype)
+
+
+def _init_mamba1(cfg: ModelConfig, key, dtype) -> dict:
+    dm, di, n, r = cfg.d_model, cfg.d_inner, cfg.ssm_state, cfg.dt_rank_actual
+    conv = cfg.ssm_conv
+    ks = jax.random.split(key, 6)
+    return {
+        "in_proj": (jax.random.normal(ks[0], (dm, 2 * di)) * dm ** -0.5
+                    ).astype(dtype),
+        "conv_w": (jax.random.normal(ks[1], (di, conv)) * conv ** -0.5
+                   ).astype(dtype),
+        "conv_b": jnp.zeros((di,), dtype),
+        "x_proj": (jax.random.normal(ks[2], (di, r + 2 * n)) * di ** -0.5
+                   ).astype(dtype),
+        "dt_proj": (jax.random.normal(ks[3], (r, di)) * r ** -0.5
+                    ).astype(dtype),
+        "dt_bias": jnp.log(jnp.expm1(
+            jnp.exp(jax.random.uniform(ks[4], (di,), jnp.float32,
+                                       jnp.log(1e-3), jnp.log(1e-1))))),
+        "a_log": jnp.log(jnp.broadcast_to(
+            jnp.arange(1, n + 1, dtype=jnp.float32), (di, n))),
+        "d_skip": jnp.ones((di,), jnp.float32),
+        "out_proj": (jax.random.normal(ks[5], (di, dm)) * di ** -0.5
+                     ).astype(dtype),
+    }
+
+
+def _init_mamba2(cfg: ModelConfig, key, dtype) -> dict:
+    dm, di, n = cfg.d_model, cfg.d_inner, cfg.ssm_state
+    h = cfg.ssm_heads
+    conv = cfg.ssm_conv
+    ks = jax.random.split(key, 4)
+    # in_proj emits [z(di), x(di), B(n), C(n), dt(h)]
+    proj_out = 2 * di + 2 * n + h
+    return {
+        "in_proj": (jax.random.normal(ks[0], (dm, proj_out)) * dm ** -0.5
+                    ).astype(dtype),
+        # conv runs over the [x, B, C] channels
+        "conv_w": (jax.random.normal(ks[1], (di + 2 * n, conv))
+                   * conv ** -0.5).astype(dtype),
+        "conv_b": jnp.zeros((di + 2 * n,), dtype),
+        "dt_bias": jnp.log(jnp.expm1(
+            jnp.exp(jax.random.uniform(ks[2], (h,), jnp.float32,
+                                       jnp.log(1e-3), jnp.log(1e-1))))),
+        "a_log": jnp.log(jnp.arange(1, h + 1, dtype=jnp.float32)),
+        "d_skip": jnp.ones((h,), jnp.float32),
+        "gate_norm": init_rmsnorm(di, dtype),
+        "out_proj": (jax.random.normal(ks[3], (di, dm)) * di ** -0.5
+                     ).astype(dtype),
+    }
+
+
+def init_ssm_cache(cfg: ModelConfig, batch: int, dtype=jnp.float32
+                   ) -> SSMCache:
+    conv_ch = cfg.d_inner if cfg.ssm_version == 1 else (
+        cfg.d_inner + 2 * cfg.ssm_state)
+    if cfg.ssm_version == 1:
+        state = jnp.zeros((batch, cfg.d_inner, cfg.ssm_state), jnp.float32)
+    else:
+        state = jnp.zeros((batch, cfg.ssm_heads, cfg.ssm_head_dim,
+                           cfg.ssm_state), jnp.float32)
+    return SSMCache(
+        conv_state=jnp.zeros((batch, conv_ch, cfg.ssm_conv - 1), dtype),
+        ssm_state=state,
+        length=jnp.zeros((batch,), jnp.int32),
+    )
+
+
+# ---------------------------------------------------------------- helpers
+
+
+def _causal_conv(x: jnp.ndarray, w: jnp.ndarray, b: jnp.ndarray
+                 ) -> jnp.ndarray:
+    """x: (B, T, C); w: (C, conv) depthwise causal conv."""
+    conv = w.shape[1]
+    xp = jnp.pad(x, ((0, 0), (conv - 1, 0), (0, 0)))
+    y = sum(xp[:, j:j + x.shape[1], :] * w[:, j] for j in range(conv))
+    return y + b
+
+
+def _conv_step(x1: jnp.ndarray, conv_state: jnp.ndarray, w: jnp.ndarray,
+               b: jnp.ndarray) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """x1: (B, C); conv_state: (B, C, conv-1) of past inputs (oldest first)."""
+    window = jnp.concatenate([conv_state, x1[:, :, None]], axis=-1)  # conv
+    y = jnp.einsum("bcj,cj->bc", window.astype(jnp.float32),
+                   w.astype(jnp.float32)) + b.astype(jnp.float32)
+    return y.astype(x1.dtype), window[:, :, 1:]
+
+
+def _assoc_scan(a: jnp.ndarray, b: jnp.ndarray, h0: jnp.ndarray
+                ) -> jnp.ndarray:
+    """Run h_t = a_t * h_{t-1} + b_t along axis 1 (time); returns all h_t.
+
+    a, b: (B, T, ...); h0: (B, ...) initial state folded into step 0.
+    """
+    b = b.at[:, 0].add(a[:, 0] * h0)
+
+    def combine(x, y):
+        ax, bx = x
+        ay, by = y
+        return ax * ay, ay * bx + by
+
+    _, h = jax.lax.associative_scan(combine, (a, b), axis=1)
+    return h
+
+
+# ---------------------------------------------------------------- mamba1
+
+
+def _mamba1_abc(p, cfg: ModelConfig, xc: jnp.ndarray):
+    """xc: (B, T, di) post-conv activations -> (dt, a, bmat, cmat)."""
+    n, r = cfg.ssm_state, cfg.dt_rank_actual
+    dbc = xc @ p["x_proj"]                                  # (B,T,r+2n)
+    dt_low, bmat, cmat = jnp.split(dbc.astype(jnp.float32), [r, r + n],
+                                   axis=-1)
+    dt = jax.nn.softplus(dt_low @ p["dt_proj"].astype(jnp.float32)
+                         + p["dt_bias"])                    # (B,T,di)
+    a = -jnp.exp(p["a_log"])                                # (di,N)
+    return dt, a, bmat, cmat
+
+
+def mamba1_prefill(p, cfg: ModelConfig, x: jnp.ndarray, cache: SSMCache
+                   ) -> Tuple[jnp.ndarray, SSMCache]:
+    bsz, t, _ = x.shape
+    di = cfg.d_inner
+    xz = x @ p["in_proj"]
+    xin, z = jnp.split(xz, 2, axis=-1)
+    xc = jax.nn.silu(_causal_conv(xin, p["conv_w"], p["conv_b"]))
+    dt, a, bmat, cmat = _mamba1_abc(p, cfg, xc)
+    xf = xc.astype(jnp.float32)
+    decay = jnp.exp(dt[..., None] * a)                      # (B,T,di,N)
+    contrib = (dt * xf)[..., None] * bmat[:, :, None, :]    # (B,T,di,N)
+    h = _assoc_scan(decay, contrib, cache.ssm_state)        # (B,T,di,N)
+    y = jnp.einsum("btdn,btn->btd", h, cmat) + p["d_skip"] * xf
+    y = (y * jax.nn.silu(z.astype(jnp.float32))).astype(x.dtype)
+    out = y @ p["out_proj"]
+    new_cache = SSMCache(
+        conv_state=jnp.pad(xin, ((0, 0), (cfg.ssm_conv - 1, 0), (0, 0))
+                           )[:, t:t + cfg.ssm_conv - 1, :].transpose(0, 2, 1),
+        ssm_state=h[:, -1],
+        length=cache.length + t,
+    )
+    return out, new_cache
+
+
+def mamba1_decode(p, cfg: ModelConfig, x1: jnp.ndarray, cache: SSMCache
+                  ) -> Tuple[jnp.ndarray, SSMCache]:
+    """x1: (B, 1, dm)."""
+    xz = x1[:, 0] @ p["in_proj"]
+    xin, z = jnp.split(xz, 2, axis=-1)                      # (B, di)
+    xc, conv_state = _conv_step(xin, cache.conv_state, p["conv_w"],
+                                p["conv_b"])
+    xc = jax.nn.silu(xc)
+    dt, a, bmat, cmat = _mamba1_abc(p, cfg, xc[:, None])    # T=1
+    dt, bmat, cmat = dt[:, 0], bmat[:, 0], cmat[:, 0]
+    xf = xc.astype(jnp.float32)
+    decay = jnp.exp(dt[..., None] * a)                      # (B,di,N)
+    contrib = (dt * xf)[..., None] * bmat[:, None, :]
+    h = decay * cache.ssm_state + contrib
+    y = jnp.einsum("bdn,bn->bd", h, cmat) + p["d_skip"] * xf
+    y = (y * jax.nn.silu(z.astype(jnp.float32))).astype(x1.dtype)
+    out = (y @ p["out_proj"])[:, None]
+    return out, SSMCache(conv_state=conv_state, ssm_state=h,
+                         length=cache.length + 1)
+
+
+# ---------------------------------------------------------------- mamba2
+
+
+def _mamba2_split(p, cfg: ModelConfig, proj: jnp.ndarray):
+    di, n, h = cfg.d_inner, cfg.ssm_state, cfg.ssm_heads
+    z, xin, bmat, cmat, dt = jnp.split(
+        proj, [di, 2 * di, 2 * di + n, 2 * di + 2 * n], axis=-1)
+    return z, xin, bmat, cmat, dt
+
+
+def mamba2_prefill(p, cfg: ModelConfig, x: jnp.ndarray, cache: SSMCache
+                   ) -> Tuple[jnp.ndarray, SSMCache]:
+    bsz, t, _ = x.shape
+    di, n = cfg.d_inner, cfg.ssm_state
+    hh, pd = cfg.ssm_heads, cfg.ssm_head_dim
+    proj = x @ p["in_proj"]
+    z, xin, bmat, cmat, dt_low = _mamba2_split(p, cfg, proj)
+    conv_in = jnp.concatenate([xin, bmat, cmat], axis=-1)   # (B,T,di+2n)
+    conv_out = jax.nn.silu(_causal_conv(conv_in, p["conv_w"], p["conv_b"]))
+    xc, bmat, cmat = jnp.split(conv_out.astype(jnp.float32), [di, di + n],
+                               axis=-1)
+    dt = jax.nn.softplus(dt_low.astype(jnp.float32) + p["dt_bias"])  # (B,T,H)
+    a = -jnp.exp(p["a_log"])                                # (H,)
+    xh = xc.reshape(bsz, t, hh, pd)
+    decay = jnp.exp(dt * a)[..., None, None]                # (B,T,H,1,1)
+    contrib = (dt[..., None] * xh)[..., None] * bmat[:, :, None, None, :]
+    h = _assoc_scan(jnp.broadcast_to(decay, contrib.shape), contrib,
+                    cache.ssm_state)                        # (B,T,H,P,N)
+    y = jnp.einsum("bthpn,btn->bthp", h, cmat)
+    y = y + p["d_skip"][:, None] * xh
+    y = y.reshape(bsz, t, di)
+    y = rmsnorm(p["gate_norm"],
+                (y * jax.nn.silu(z.astype(jnp.float32))).astype(x.dtype),
+                cfg.norm_eps)
+    out = y @ p["out_proj"]
+    new_cache = SSMCache(
+        conv_state=jnp.pad(conv_in, ((0, 0), (cfg.ssm_conv - 1, 0), (0, 0))
+                           )[:, t:t + cfg.ssm_conv - 1, :].transpose(0, 2, 1),
+        ssm_state=h[:, -1],
+        length=cache.length + t,
+    )
+    return out, new_cache
+
+
+def mamba2_decode(p, cfg: ModelConfig, x1: jnp.ndarray, cache: SSMCache
+                  ) -> Tuple[jnp.ndarray, SSMCache]:
+    bsz = x1.shape[0]
+    di, n = cfg.d_inner, cfg.ssm_state
+    hh, pd = cfg.ssm_heads, cfg.ssm_head_dim
+    proj = x1[:, 0] @ p["in_proj"]
+    z, xin, bmat, cmat, dt_low = _mamba2_split(p, cfg, proj)
+    conv_in = jnp.concatenate([xin, bmat, cmat], axis=-1)   # (B, di+2n)
+    conv_out, conv_state = _conv_step(conv_in, cache.conv_state,
+                                      p["conv_w"], p["conv_b"])
+    conv_out = jax.nn.silu(conv_out.astype(jnp.float32))
+    xc, bmat, cmat = jnp.split(conv_out, [di, di + n], axis=-1)
+    dt = jax.nn.softplus(dt_low.astype(jnp.float32) + p["dt_bias"])  # (B,H)
+    a = -jnp.exp(p["a_log"])
+    xh = xc.reshape(bsz, hh, pd)
+    decay = jnp.exp(dt * a)[..., None, None]                # (B,H,1,1)
+    contrib = (dt[..., None] * xh)[..., None] * bmat[:, None, None, :]
+    h = decay * cache.ssm_state + contrib                   # (B,H,P,N)
+    y = jnp.einsum("bhpn,bn->bhp", h, cmat) + p["d_skip"][:, None] * xh
+    y = y.reshape(bsz, di)
+    y = rmsnorm(p["gate_norm"],
+                (y * jax.nn.silu(z.astype(jnp.float32))).astype(x1.dtype),
+                cfg.norm_eps)
+    out = (y @ p["out_proj"])[:, None]
+    return out, SSMCache(conv_state=conv_state, ssm_state=h,
+                         length=cache.length + 1)
+
+
+def mamba_prefill(p, cfg: ModelConfig, x: jnp.ndarray, cache: SSMCache):
+    fn = mamba1_prefill if cfg.ssm_version == 1 else mamba2_prefill
+    return fn(p, cfg, x, cache)
+
+
+def mamba_decode(p, cfg: ModelConfig, x1: jnp.ndarray, cache: SSMCache):
+    fn = mamba1_decode if cfg.ssm_version == 1 else mamba2_decode
+    return fn(p, cfg, x1, cache)

@@ -1,0 +1,643 @@
+"""Top-level model: init / train forward / prefill / decode for every
+assigned architecture family, with DyMoE integrated as a first-class feature.
+
+**Scan-over-layers**: per-layer parameters are STACKED (leading dim L) and
+the stack is driven by ``jax.lax.scan``, so the compiled HLO contains ONE
+block body regardless of depth — this is what makes the 64-layer dry-runs
+compile in seconds instead of hours (see EXPERIMENTS.md §Perf iteration 0).
+Per-layer heterogeneity (DyMoE's depth schedule t_l, layer precision tiers,
+the hybrid's shared-attention sites, look-ahead routers) rides along as
+scanned inputs.
+
+Layer pattern per family (pre-norm residual blocks):
+  dense/vlm/audio:  x += Attn(n1(x));  x += MLP(n2(x))
+  moe:              x += Attn(n1(x));  x += MoE(n2(x))      [+ shared experts]
+  ssm:              x += Mamba(n(x))
+  hybrid (zamba2):  Mamba backbone + a weight-SHARED attention block applied
+                    every ``shared_attn_every`` layers (per-site KV caches).
+
+DyMoE integration (inference paths):
+  * prefill — per layer, attention also yields per-token received-attention
+    mass (Eq. 1); heavy-hitter routing stats give expert importance (Eq. 2);
+    the depth schedule's t_l picks the Critical set (Eq. 4–5); next-layer
+    gate predictions (Eq. 6–7) are emitted for the prefetch engine.
+  * decode — gate-guided importance (Eq. 3) + direct prefetch (Eq. 8).
+  * dense/SSM archs — only the depth-aware layer tiering applies
+    (DESIGN.md §Arch-applicability).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.importance import heavy_hitter_mask, \
+    prefill_expert_importance, select_critical
+from repro.core.prefetch import predict_next_gates, prefetch_targets
+from repro.core.schedule import critical_counts, retention_ratio
+from repro.models.config import ModelConfig
+from repro.models.kv_cache import KVCache, fill_kv_cache, init_kv_cache
+from repro.models.layers.attention import attention_decode, attention_train, \
+    init_attention
+from repro.models.layers.mlp import init_mlp, mlp, mlp_quantized, quantize_mlp
+from repro.models.layers.moe import init_moe, moe_apply_sharded, quantize_moe
+from repro.models.layers.norms import init_rmsnorm, rmsnorm
+from repro.models.layers.rotary import sinusoidal_embedding
+from repro.models.layers.ssm import init_mamba, init_ssm_cache, \
+    mamba_decode, mamba_prefill
+from repro.quant.qtensor import MixedPrecisionWeights
+
+__all__ = [
+    "init_params", "quantize_model", "forward", "loss_fn", "train_step_fn",
+    "prefill", "decode_step", "init_decode_state", "DyMoEInfo",
+]
+
+
+def _dtype(cfg: ModelConfig):
+    return jnp.dtype(cfg.dtype)
+
+
+def _tmap(f, *trees):
+    return jax.tree.map(f, *trees)
+
+
+def _index_tree(tree, i):
+    return _tmap(lambda x: x[i], tree)
+
+
+def _scan_blocks(cfg: ModelConfig, body, carry0, xs):
+    """lax.scan over the layer stack, or an unrolled Python loop when
+    ``cfg.scan_layers`` is False (used by the dry-run to recover per-layer
+    costs: XLA's cost_analysis counts a while-loop body once)."""
+    if cfg.scan_layers:
+        return jax.lax.scan(body, carry0, xs)
+    carry = carry0
+    ys = []
+    for l in range(cfg.num_layers):
+        carry, y = body(carry, _index_tree(xs, l))
+        ys.append(y)
+    if ys and ys[0] is not None:
+        ys = _tmap(lambda *zs: jnp.stack(zs), *ys)
+    else:
+        ys = None
+    return carry, ys
+
+
+# --------------------------------------------------------------------- init
+
+
+def _init_block(cfg: ModelConfig, key, kind: str, dtype) -> Dict[str, Any]:
+    lp: Dict[str, Any] = {"norm1": init_rmsnorm(cfg.d_model, dtype)}
+    k1, k2 = jax.random.split(key)
+    if kind in ("attn_dense", "attn_moe"):
+        lp["norm2"] = init_rmsnorm(cfg.d_model, dtype)
+        lp["attn"] = init_attention(cfg, k1, dtype)
+        if kind == "attn_moe":
+            lp["moe"] = init_moe(cfg, k2, dtype)
+        else:
+            lp["mlp"] = init_mlp(cfg, k2, dtype)
+    else:
+        lp["ssm"] = init_mamba(cfg, k1, dtype)
+    return lp
+
+
+def init_params(cfg: ModelConfig, key) -> Dict[str, Any]:
+    """Parameters with layer stack STACKED along a leading L dim."""
+    cfg.validate()
+    dt = _dtype(cfg)
+    kinds = cfg.block_kinds()
+    assert len(set(kinds)) == 1, "block kinds are uniform per arch"
+    kind = kinds[0]
+    k_embed, k_head, k_layers, k_shared = jax.random.split(key, 4)
+    params: Dict[str, Any] = {
+        "embed": (jax.random.normal(k_embed, (cfg.vocab_size, cfg.d_model))
+                  * cfg.d_model ** -0.5).astype(dt),
+        "final_norm": init_rmsnorm(cfg.d_model, dt),
+        "layers": jax.vmap(
+            lambda k: _init_block(cfg, k, kind, dt)
+        )(jax.random.split(k_layers, cfg.num_layers)),
+    }
+    if not cfg.tie_embeddings:
+        params["lm_head"] = (jax.random.normal(
+            k_head, (cfg.d_model, cfg.vocab_size)) * cfg.d_model ** -0.5
+            ).astype(dt)
+    if cfg.shared_attn_every:
+        s1, s2 = jax.random.split(k_shared)
+        params["shared_attn"] = {
+            "norm1": init_rmsnorm(cfg.d_model, dt),
+            "norm2": init_rmsnorm(cfg.d_model, dt),
+            "attn": init_attention(cfg, s1, dt),
+            "mlp": init_mlp(cfg, s2, dt),
+        }
+    return params
+
+
+def quantize_model(params, cfg: ModelConfig) -> Dict[str, Any]:
+    """DyMoE mixed-precision store (paper §5: experts only — on non-MoE
+    archs the FFN / SSM projections, the closest analogue). Operates on the
+    stacked layer weights, so quantized leaves keep the leading L dim and
+    scan alongside the layer stack."""
+    pol = cfg.dymoe
+    low = pol.low_bits or None
+    kind = cfg.block_kinds()[0]
+    lp = params["layers"]
+    if kind == "attn_moe":
+        q = {"moe": quantize_moe(lp["moe"], cfg)}
+    elif kind == "attn_dense":
+        q = {"mlp": quantize_mlp(lp["mlp"], cfg)}
+    else:
+        q = {"ssm": {
+            name: MixedPrecisionWeights.build(
+                lp["ssm"][name], pol.high_bits, low, pol.group_size)
+            for name in ("in_proj", "out_proj")
+        }}
+    return {"layers": q}
+
+
+# ------------------------------------------------------------------ helpers
+
+
+def _embed(params, cfg: ModelConfig, tokens: Optional[jnp.ndarray],
+           embeds: Optional[jnp.ndarray],
+           positions: Optional[jnp.ndarray] = None) -> jnp.ndarray:
+    x = (embeds.astype(_dtype(cfg)) if embeds is not None
+         else jnp.take(params["embed"], tokens, axis=0))
+    if cfg.pos_emb == "sinusoidal":
+        b, s, dm = x.shape
+        if positions is None:
+            positions = jnp.broadcast_to(
+                jnp.arange(s, dtype=jnp.int32)[None], (b, s))
+        x = x + sinusoidal_embedding(positions, dm).astype(x.dtype)
+    return x
+
+
+def _lm_head(params, cfg: ModelConfig, x: jnp.ndarray) -> jnp.ndarray:
+    w = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    return (x @ w).astype(jnp.float32)
+
+
+def _layer_tier_flags(cfg: ModelConfig) -> jnp.ndarray:
+    """Depth-aware layer criticality for non-MoE archs: a layer is Critical
+    (high precision) when its retention ratio is >= the schedule mean."""
+    lam = cfg.dymoe.lam
+    mean_r = (1.0 + lam) / 2.0
+    return jnp.asarray([
+        retention_ratio(l, cfg.num_layers, lam, cfg.dymoe.depth_schedule)
+        >= mean_r
+        for l in range(cfg.num_layers)], bool)
+
+
+def _t_l_array(cfg: ModelConfig) -> jnp.ndarray:
+    return jnp.asarray(critical_counts(
+        cfg.num_layers, max(cfg.num_experts, 1), cfg.dymoe.lam,
+        cfg.dymoe.depth_schedule), jnp.int32)
+
+
+def _shared_flags(cfg: ModelConfig) -> jnp.ndarray:
+    return jnp.asarray([cfg.shared_attn_every and
+                        l % cfg.shared_attn_every == 0
+                        for l in range(cfg.num_layers)], bool)
+
+
+def _site_index(cfg: ModelConfig) -> jnp.ndarray:
+    """Per-layer index into the shared-site cache stack (valid where
+    shared flag is set)."""
+    idx, cur = [], 0
+    for l in range(cfg.num_layers):
+        idx.append(cur)
+        if cfg.shared_attn_every and l % cfg.shared_attn_every == 0:
+            cur += 1
+    return jnp.asarray(idx, jnp.int32)
+
+
+def _n_sites(cfg: ModelConfig) -> int:
+    return len(range(0, cfg.num_layers, cfg.shared_attn_every)) \
+        if cfg.shared_attn_every else 0
+
+
+def _pick_mixed(mp: MixedPrecisionWeights, critical, dtype):
+    """Per-layer precision pick for dense/SSM weights (traced flag)."""
+    hi = mp.high.dequantize(dtype)
+    if mp.low is None:  # "x/0" on a dense weight would ablate the layer —
+        return hi       # conservative: keep high
+    lo = mp.low.dequantize(dtype)
+    c = jnp.asarray(critical)
+    return jnp.where(c, hi, lo)
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class DyMoEInfo:
+    """Per-step DyMoE telemetry for the orchestration engine / benchmarks."""
+
+    critical_masks: Optional[jnp.ndarray] = None   # (L, E) bool
+    active_masks: Optional[jnp.ndarray] = None     # (L, E) bool
+    expert_load: Optional[jnp.ndarray] = None      # (L, E)
+    expert_hh_load: Optional[jnp.ndarray] = None   # (L, E)
+    gate_mean: Optional[jnp.ndarray] = None        # (L, E)
+    predicted_next: Optional[jnp.ndarray] = None   # (L, E) Eq. 6–8 demand
+    token_importance: Optional[jnp.ndarray] = None  # (B, S) Eq. 1, last layer
+    aux_loss: Optional[jnp.ndarray] = None
+    dropped_frac: Optional[jnp.ndarray] = None
+
+
+def _shared_block_train(params, cfg: ModelConfig, x):
+    sp = params["shared_attn"]
+    a, _, kv = attention_train(sp["attn"], cfg,
+                               rmsnorm(sp["norm1"], x, cfg.norm_eps))
+    x = x + a
+    x = x + mlp(sp["mlp"], cfg, rmsnorm(sp["norm2"], x, cfg.norm_eps))
+    return x, kv
+
+
+# ------------------------------------------------------- train forward
+
+
+def forward(params, cfg: ModelConfig, tokens: Optional[jnp.ndarray] = None,
+            *, embeds: Optional[jnp.ndarray] = None
+            ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Training forward. Returns (logits (B,S,V) f32, aux_loss scalar)."""
+    x = _embed(params, cfg, tokens, embeds)
+    b, s, _ = x.shape
+    kind = cfg.block_kinds()[0]
+    hybrid = bool(cfg.shared_attn_every)
+
+    def body(carry, xs):
+        x, aux = carry
+        lp = xs["block"]
+        if cfg.act_seq_shard:
+            # sequence-shard the residual stream so the remat-saved carry is
+            # bounded to 1/model-shards per device (§Perf hillclimb B)
+            from jax.sharding import PartitionSpec as _P
+            x = jax.lax.with_sharding_constraint(
+                x, _P(_P.UNCONSTRAINED, "model", _P.UNCONSTRAINED))
+        if hybrid:
+            def with_shared(x):
+                return _shared_block_train(params, cfg, x)[0]
+            x = jax.lax.cond(xs["shared"], with_shared, lambda x: x, x)
+        if kind in ("attn_dense", "attn_moe"):
+            a, _, _ = attention_train(lp["attn"], cfg,
+                                      rmsnorm(lp["norm1"], x, cfg.norm_eps))
+            x = x + a
+            h = rmsnorm(lp["norm2"], x, cfg.norm_eps)
+            if kind == "attn_dense":
+                x = x + mlp(lp["mlp"], cfg, h)
+            else:
+                y, stats = moe_apply_sharded(lp["moe"], cfg, h.reshape(b * s, -1))
+                x = x + y.reshape(b, s, -1)
+                aux = aux + stats.aux_loss
+        else:
+            y, _ = mamba_prefill(lp["ssm"], cfg,
+                                 rmsnorm(lp["norm1"], x, cfg.norm_eps),
+                                 init_ssm_cache(cfg, b))
+            x = x + y
+        return (x, aux), None
+
+    if cfg.remat == "block":
+        body = jax.checkpoint(body)
+    xs = {"block": params["layers"]}
+    if hybrid:
+        xs["shared"] = _shared_flags(cfg)
+    (x, aux), _ = _scan_blocks(cfg, body, (x, jnp.zeros((), jnp.float32)), xs)
+    x = rmsnorm(params["final_norm"], x, cfg.norm_eps)
+    return _lm_head(params, cfg, x), aux
+
+
+def loss_fn(params, cfg: ModelConfig, batch: Dict[str, jnp.ndarray]
+            ) -> Tuple[jnp.ndarray, Dict[str, jnp.ndarray]]:
+    logits, aux = forward(params, cfg, batch.get("tokens"),
+                          embeds=batch.get("embeds"))
+    labels = batch["labels"]
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    nll = -jnp.take_along_axis(logp, labels[..., None], axis=-1)[..., 0]
+    mask = batch.get("loss_mask")
+    if mask is None:
+        mask = jnp.ones_like(nll)
+    ce = (nll * mask).sum() / jnp.maximum(mask.sum(), 1.0)
+    return ce + aux, {"ce": ce, "aux": aux}
+
+
+def train_step_fn(cfg: ModelConfig, optimizer):
+    """Returns a pure train_step(params, opt_state, batch)."""
+
+    def step(params, opt_state, batch):
+        (loss, metrics), grads = jax.value_and_grad(
+            loss_fn, has_aux=True)(params, cfg, batch)
+        params, opt_state = optimizer.update(params, grads, opt_state)
+        return params, opt_state, dict(metrics, loss=loss)
+
+    return step
+
+
+# ------------------------------------------------------------------ prefill
+
+
+def prefill(params, cfg: ModelConfig, tokens: Optional[jnp.ndarray] = None,
+            *, embeds: Optional[jnp.ndarray] = None,
+            qparams: Optional[dict] = None,
+            cache_slots: Optional[int] = None,
+            full_logits: bool = False,
+            ) -> Tuple[jnp.ndarray, Any, DyMoEInfo]:
+    """Prefill pass. DyMoE active when ``qparams`` is given and policy on.
+
+    Returns (last-token logits (B, V), caches, DyMoEInfo). Caches are a
+    stacked pytree: {"layers": KVCache/SSMCache with leading L,
+    "shared": KVCache with leading n_sites (hybrid only)}.
+    """
+    x = _embed(params, cfg, tokens, embeds)
+    b, s, _ = x.shape
+    dt = _dtype(cfg)
+    dymoe_on = qparams is not None and cfg.dymoe.enabled
+    pol = cfg.dymoe
+    kind = cfg.block_kinds()[0]
+    hybrid = bool(cfg.shared_attn_every)
+    slots = cache_slots or (cfg.sliding_window or max(s, cfg.max_seq_len))
+    ring = cfg.sliding_window is not None and slots == cfg.sliding_window
+
+    xs: Dict[str, Any] = {"block": params["layers"]}
+    if dymoe_on:
+        xs["q"] = qparams["layers"]
+        xs["tier"] = _layer_tier_flags(cfg)
+        if kind == "attn_moe":
+            xs["t_l"] = _t_l_array(cfg)
+            xs["next_router"] = jnp.roll(
+                params["layers"]["moe"]["wg_router"], -1, axis=0)
+    elif kind == "attn_moe":
+        xs["t_l"] = _t_l_array(cfg)
+        xs["next_router"] = jnp.roll(
+            params["layers"]["moe"]["wg_router"], -1, axis=0)
+    if hybrid:
+        xs["shared"] = _shared_flags(cfg)
+        xs["site"] = _site_index(cfg)
+        shared_caches0 = jax.vmap(
+            lambda _: init_kv_cache(b, cfg.num_kv_heads, slots, cfg.head_dim,
+                                    dt, ring)
+        )(jnp.arange(_n_sites(cfg)))
+
+    e = max(cfg.num_experts, 1)
+
+    def body(carry, xs_l):
+        if hybrid:
+            x, shared_caches = carry
+        else:
+            (x,) = carry
+        lp = xs_l["block"]
+
+        if hybrid:
+            def with_shared(operand):
+                x, sc = operand
+                x2, (k_s, v_s) = _shared_block_train(params, cfg, x)
+                site = xs_l["site"]
+                new = fill_kv_cache(_index_tree(sc, site), k_s, v_s)
+                sc = _tmap(lambda full, n: full.at[site].set(n), sc, new)
+                return x2, sc
+            x, shared_caches = jax.lax.cond(
+                xs_l["shared"], with_shared, lambda o: o, (x, shared_caches))
+
+        telem: Dict[str, Any] = {}
+        if kind in ("attn_dense", "attn_moe"):
+            want_imp = kind == "attn_moe"
+            a, tok_imp, (k, v) = attention_train(
+                lp["attn"], cfg, rmsnorm(lp["norm1"], x, cfg.norm_eps),
+                want_token_importance=want_imp)
+            cache = fill_kv_cache(
+                init_kv_cache(b, cfg.num_kv_heads, slots, cfg.head_dim, dt,
+                              ring), k, v)
+            x = x + a
+            h = rmsnorm(lp["norm2"], x, cfg.norm_eps)
+            if kind == "attn_dense":
+                if dymoe_on:
+                    y = mlp_quantized(xs_l["q"]["mlp"], cfg, h, xs_l["tier"])
+                else:
+                    y = mlp(lp["mlp"], cfg, h)
+                x = x + y
+            else:
+                hflat = h.reshape(b * s, -1)
+                critical, hh = None, None
+                if dymoe_on:
+                    hh = heavy_hitter_mask(
+                        tok_imp, pol.heavy_hitter_frac).reshape(b * s)
+                    # router pre-pass: pick the Critical set BEFORE expert
+                    # compute (Eq. 1-2 -> Eq. 5)
+                    logits_r = hflat.astype(jnp.float32) @ lp["moe"][
+                        "wg_router"]
+                    probs_r = jax.nn.softmax(logits_r, axis=-1)
+                    _, idx_r = jax.lax.top_k(probs_r,
+                                             cfg.num_experts_per_tok)
+                    oh = jax.nn.one_hot(idx_r, e, dtype=jnp.float32)
+                    imp = prefill_expert_importance(
+                        jnp.einsum("tke,t->e", oh, hh), oh.sum(axis=(0, 1)))
+                    critical = select_critical(imp, xs_l["t_l"])
+                y, stats = moe_apply_sharded(
+                    lp["moe"], cfg, hflat, hh_mask=hh,
+                    critical_mask=critical,
+                    qweights=xs_l["q"]["moe"] if dymoe_on else None)
+                x = x + y.reshape(b, s, -1)
+                # look-ahead (Eq. 6-7) for the next layer's prefetcher
+                pg = predict_next_gates(hflat, xs_l["next_router"])
+                _, freq = prefetch_targets(pg, cfg.num_experts_per_tok,
+                                           pol.prefetch_topk)
+                telem = dict(
+                    critical=(critical if critical is not None
+                              else jnp.ones((e,), bool)),
+                    active=stats.expert_load > 0,
+                    load=stats.expert_load,
+                    hh_load=stats.expert_hh_load,
+                    gate_mean=stats.gate_mean,
+                    pred=freq,
+                    aux=stats.aux_loss,
+                    dropped=stats.dropped_frac,
+                    tok_imp=(tok_imp if tok_imp is not None
+                             else jnp.zeros((b, s), jnp.float32)),
+                )
+        else:  # ssm
+            h = rmsnorm(lp["norm1"], x, cfg.norm_eps)
+            sp = lp["ssm"]
+            if dymoe_on:
+                qs = xs_l["q"]["ssm"]
+                sp = dict(sp,
+                          in_proj=_pick_mixed(qs["in_proj"], xs_l["tier"], dt),
+                          out_proj=_pick_mixed(qs["out_proj"], xs_l["tier"],
+                                               dt))
+            y, cache = mamba_prefill(sp, cfg, h, init_ssm_cache(cfg, b, dt))
+            x = x + y
+
+        carry = (x, shared_caches) if hybrid else (x,)
+        return carry, {"cache": cache, **telem}
+
+    carry0 = (x, shared_caches0) if hybrid else (x,)
+    carry, ys = _scan_blocks(cfg, body, carry0, xs)
+    x = carry[0]
+    x = rmsnorm(params["final_norm"], x, cfg.norm_eps)
+    logits = _lm_head(params, cfg, x if full_logits else x[:, -1])
+
+    caches: Dict[str, Any] = {"layers": ys["cache"]}
+    if hybrid:
+        caches["shared"] = carry[1]
+    info = DyMoEInfo()
+    if kind == "attn_moe":
+        info.critical_masks = ys["critical"]
+        info.active_masks = ys["active"]
+        info.expert_load = ys["load"]
+        info.expert_hh_load = ys["hh_load"]
+        info.gate_mean = ys["gate_mean"]
+        # roll feeds layer 0's router to the last layer: mask it out
+        pred = ys["pred"].at[-1].set(0.0)
+        info.predicted_next = pred
+        info.aux_loss = ys["aux"].sum()
+        info.dropped_frac = ys["dropped"].mean()
+        info.token_importance = ys["tok_imp"][-1]
+    return logits, caches, info
+
+
+# ------------------------------------------------------------------- decode
+
+
+def init_decode_state(cfg: ModelConfig, batch: int, seq_len: int) -> Any:
+    """Fresh stacked caches sized for ``seq_len`` context (ring-buffered to
+    the sliding window when configured)."""
+    dt = _dtype(cfg)
+    slots = min(seq_len, cfg.sliding_window) if cfg.sliding_window else seq_len
+    ring = cfg.sliding_window is not None and slots == cfg.sliding_window
+    kind = cfg.block_kinds()[0]
+
+    def one(_):
+        if kind in ("attn_dense", "attn_moe"):
+            return init_kv_cache(batch, cfg.num_kv_heads, slots,
+                                 cfg.head_dim, dt, ring)
+        return init_ssm_cache(cfg, batch, dt)
+
+    caches = {"layers": jax.vmap(one)(jnp.arange(cfg.num_layers))}
+    if cfg.shared_attn_every:
+        caches["shared"] = jax.vmap(
+            lambda _: init_kv_cache(batch, cfg.num_kv_heads, slots,
+                                    cfg.head_dim, dt, ring)
+        )(jnp.arange(_n_sites(cfg)))
+    return caches
+
+
+def decode_step(params, cfg: ModelConfig, tokens: jnp.ndarray,
+                caches: Any, *, qparams: Optional[dict] = None,
+                ) -> Tuple[jnp.ndarray, Any, DyMoEInfo]:
+    """One decode step. tokens: (B,) int32. Returns (logits (B, V) f32,
+    caches, DyMoEInfo with gate-guided importance + Eq. 8 predictions)."""
+    dt = _dtype(cfg)
+    kind = cfg.block_kinds()[0]
+    hybrid = bool(cfg.shared_attn_every)
+    dymoe_on = qparams is not None and cfg.dymoe.enabled
+    pol = cfg.dymoe
+    b = tokens.shape[0]
+    e = max(cfg.num_experts, 1)
+
+    positions = caches["layers"].length[0][:, None]  # (B,1) new-token pos
+    x = _embed(params, cfg, tokens[:, None], None, positions=positions)
+
+    xs: Dict[str, Any] = {"block": params["layers"],
+                          "cache": caches["layers"]}
+    if dymoe_on:
+        xs["q"] = qparams["layers"]
+        xs["tier"] = _layer_tier_flags(cfg)
+    if kind == "attn_moe":
+        xs["t_l"] = _t_l_array(cfg)
+        xs["next_router"] = jnp.roll(
+            params["layers"]["moe"]["wg_router"], -1, axis=0)
+    if hybrid:
+        xs["shared"] = _shared_flags(cfg)
+        xs["site"] = _site_index(cfg)
+
+    def body(carry, xs_l):
+        if hybrid:
+            x, shared_caches = carry
+        else:
+            (x,) = carry
+        lp = xs_l["block"]
+        cache = xs_l["cache"]
+
+        if hybrid:
+            def with_shared(operand):
+                x, sc = operand
+                sp = params["shared_attn"]
+                site = xs_l["site"]
+                a, new = attention_decode(
+                    sp["attn"], cfg, rmsnorm(sp["norm1"], x, cfg.norm_eps),
+                    _index_tree(sc, site))
+                sc = _tmap(lambda full, n: full.at[site].set(n), sc, new)
+                x = x + a
+                x = x + mlp(sp["mlp"], cfg,
+                            rmsnorm(sp["norm2"], x, cfg.norm_eps))
+                return x, sc
+            x, shared_caches = jax.lax.cond(
+                xs_l["shared"], with_shared, lambda o: o, (x, shared_caches))
+
+        telem: Dict[str, Any] = {}
+        if kind in ("attn_dense", "attn_moe"):
+            a, cache = attention_decode(
+                lp["attn"], cfg, rmsnorm(lp["norm1"], x, cfg.norm_eps),
+                cache)
+            x = x + a
+            h = rmsnorm(lp["norm2"], x, cfg.norm_eps)
+            if kind == "attn_dense":
+                if dymoe_on:
+                    y = mlp_quantized(xs_l["q"]["mlp"], cfg, h, xs_l["tier"])
+                else:
+                    y = mlp(lp["mlp"], cfg, h)
+                x = x + y
+            else:
+                hflat = h.reshape(b, -1)
+                critical = None
+                if dymoe_on:
+                    # Eq. (3): gate-guided importance (batch-mean gate)
+                    logits_r = hflat.astype(jnp.float32) @ lp["moe"][
+                        "wg_router"]
+                    imp = jax.nn.softmax(logits_r, axis=-1).mean(axis=0)
+                    critical = select_critical(imp, xs_l["t_l"])
+                y, stats = moe_apply_sharded(
+                    lp["moe"], cfg, hflat, critical_mask=critical,
+                    qweights=xs_l["q"]["moe"] if dymoe_on else None)
+                x = x + y.reshape(b, 1, -1)
+                pg = predict_next_gates(hflat, xs_l["next_router"])
+                _, freq = prefetch_targets(pg, cfg.num_experts_per_tok,
+                                           pol.prefetch_topk)
+                telem = dict(
+                    critical=(critical if critical is not None
+                              else jnp.ones((e,), bool)),
+                    active=stats.expert_load > 0,
+                    gate_mean=stats.gate_mean,
+                    pred=freq,
+                )
+        else:  # ssm
+            h = rmsnorm(lp["norm1"], x, cfg.norm_eps)
+            sp = lp["ssm"]
+            if dymoe_on:
+                qs = xs_l["q"]["ssm"]
+                sp = dict(sp,
+                          in_proj=_pick_mixed(qs["in_proj"], xs_l["tier"], dt),
+                          out_proj=_pick_mixed(qs["out_proj"], xs_l["tier"],
+                                               dt))
+            y, cache = mamba_decode(sp, cfg, h, cache)
+            x = x + y
+
+        carry = (x, shared_caches) if hybrid else (x,)
+        return carry, {"cache": cache, **telem}
+
+    if hybrid:
+        carry0 = (x, caches["shared"])
+    else:
+        carry0 = (x,)
+    carry, ys = _scan_blocks(cfg, body, carry0, xs)
+    x = carry[0]
+    x = rmsnorm(params["final_norm"], x, cfg.norm_eps)
+    logits = _lm_head(params, cfg, x[:, 0])
+
+    new_caches: Dict[str, Any] = {"layers": ys["cache"]}
+    if hybrid:
+        new_caches["shared"] = carry[1]
+    info = DyMoEInfo()
+    if kind == "attn_moe":
+        info.critical_masks = ys["critical"]
+        info.active_masks = ys["active"]
+        info.gate_mean = ys["gate_mean"]
+        info.predicted_next = ys["pred"].at[-1].set(0.0)
+    return logits, new_caches, info

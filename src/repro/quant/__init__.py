@@ -1,0 +1,28 @@
+"""Quantization substrate: bit-packing, group-wise quantizers, QuantizedTensor.
+
+DyMoE's precision spectrum is {8, 4, 2, 0} bits. Weights are quantized
+group-wise along the reduction (K) axis with per-group scale (symmetric) so
+that dequantization is a cheap multiply that fuses into the matmul kernel.
+"""
+from repro.quant.packing import pack_bits, unpack_bits, packed_dim
+from repro.quant.quantize import (
+    quantize_groupwise,
+    dequantize_groupwise,
+    quantize_tensor,
+    dequantize_tensor,
+    gptq_lite_quantize,
+)
+from repro.quant.qtensor import QuantizedTensor, MixedPrecisionWeights
+
+__all__ = [
+    "pack_bits",
+    "unpack_bits",
+    "packed_dim",
+    "quantize_groupwise",
+    "dequantize_groupwise",
+    "quantize_tensor",
+    "dequantize_tensor",
+    "gptq_lite_quantize",
+    "QuantizedTensor",
+    "MixedPrecisionWeights",
+]

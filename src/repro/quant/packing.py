@@ -1,0 +1,83 @@
+"""Bit-packing for sub-byte integer weights.
+
+We pack along the LAST axis (the reduction axis K in our weight layout
+``(..., K, N) -> packed (..., K/per_byte, N)``? No — we keep the layout
+``(..., K)`` rows and pack along that trailing axis into uint8 lanes:
+``bits=4`` packs 2 values/byte, ``bits=2`` packs 4 values/byte, ``bits=8``
+is a plain uint8 view (offset-coded).
+
+Values are *signed* integers in ``[-2^(b-1), 2^(b-1) - 1]`` stored
+offset-coded as unsigned ``v + 2^(b-1)`` so packing is pure bit-fiddling.
+All functions are jittable and shape-static.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = ["pack_bits", "unpack_bits", "packed_dim", "values_per_byte"]
+
+
+def values_per_byte(bits: int) -> int:
+    if bits not in (2, 4, 8):
+        raise ValueError(f"unsupported bit width: {bits}")
+    return 8 // bits
+
+
+def packed_dim(k: int, bits: int) -> int:
+    """Size of the trailing axis after packing ``k`` values at ``bits``."""
+    vpb = values_per_byte(bits)
+    if k % vpb != 0:
+        raise ValueError(f"trailing dim {k} not divisible by {vpb} for int{bits}")
+    return k // vpb
+
+
+def pack_bits(values: jnp.ndarray, bits: int) -> jnp.ndarray:
+    """Pack signed ints (any int dtype) into a uint8 array along the last axis.
+
+    values in [-2^(b-1), 2^(b-1)-1]; output trailing dim = k // (8//bits).
+    """
+    vpb = values_per_byte(bits)
+    offset = 1 << (bits - 1)
+    u = (values.astype(jnp.int32) + offset).astype(jnp.uint8)
+    if bits == 8:
+        return u
+    *lead, k = u.shape
+    if k % vpb != 0:
+        raise ValueError(f"trailing dim {k} not divisible by {vpb}")
+    u = u.reshape(*lead, k // vpb, vpb)
+    out = jnp.zeros((*lead, k // vpb), dtype=jnp.uint8)
+    for j in range(vpb):
+        out = out | (u[..., j] << (bits * j))
+    return out
+
+
+def unpack_bits(packed: jnp.ndarray, bits: int) -> jnp.ndarray:
+    """Inverse of :func:`pack_bits`; returns int8 in [-2^(b-1), 2^(b-1)-1]."""
+    offset = 1 << (bits - 1)
+    if bits == 8:
+        return (packed.astype(jnp.int32) - offset).astype(jnp.int8)
+    vpb = values_per_byte(bits)
+    mask = (1 << bits) - 1
+    parts = []
+    for j in range(vpb):
+        parts.append((packed >> (bits * j)) & mask)
+    u = jnp.stack(parts, axis=-1)  # (..., k/vpb, vpb)
+    *lead, kp, _ = u.shape
+    u = u.reshape(*lead, kp * vpb)
+    return (u.astype(jnp.int32) - offset).astype(jnp.int8)
+
+
+def pack_bits_np(values: np.ndarray, bits: int) -> np.ndarray:
+    """NumPy twin of pack_bits for host-side checkpoint/cache tooling."""
+    vpb = values_per_byte(bits)
+    offset = 1 << (bits - 1)
+    u = (values.astype(np.int32) + offset).astype(np.uint8)
+    if bits == 8:
+        return u
+    *lead, k = u.shape
+    u = u.reshape(*lead, k // vpb, vpb)
+    out = np.zeros((*lead, k // vpb), dtype=np.uint8)
+    for j in range(vpb):
+        out |= u[..., j] << (bits * j)
+    return out

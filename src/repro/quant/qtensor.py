@@ -1,0 +1,73 @@
+"""Pytree containers for quantized and mixed-precision weights."""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.quant.quantize import quantize_tensor, dequantize_tensor
+
+__all__ = ["QuantizedTensor", "MixedPrecisionWeights"]
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class QuantizedTensor:
+    """A bit-packed group-wise-quantized weight.
+
+    packed: uint8 (..., N, K // values_per_byte)
+    scales: float32 (..., K // group_size, N)
+    bits / group_size / k are static metadata.
+    """
+
+    packed: jnp.ndarray
+    scales: jnp.ndarray
+    bits: int = dataclasses.field(metadata=dict(static=True))
+    group_size: int = dataclasses.field(metadata=dict(static=True))
+    k: int = dataclasses.field(metadata=dict(static=True))
+
+    @classmethod
+    def quantize(cls, w: jnp.ndarray, bits: int, group_size: int) -> "QuantizedTensor":
+        packed, scales = quantize_tensor(w, bits, group_size)
+        return cls(packed=packed, scales=scales, bits=bits,
+                   group_size=group_size, k=w.shape[-2])
+
+    def dequantize(self, dtype=jnp.bfloat16) -> jnp.ndarray:
+        return dequantize_tensor(self.packed, self.scales, self.bits,
+                                 self.group_size, dtype)
+
+    @property
+    def n(self) -> int:
+        return self.packed.shape[-2]
+
+    def nbytes(self) -> int:
+        return self.packed.size + self.scales.size * 4
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class MixedPrecisionWeights:
+    """High- and low-precision quantized variants of the same weight, the
+    storage unit of DyMoE's precision spectrum. ``low`` is None for a "4/0"
+    deployment where sub-critical experts are skipped outright.
+    """
+
+    high: QuantizedTensor
+    low: Optional[QuantizedTensor]
+
+    @classmethod
+    def build(cls, w: jnp.ndarray, high_bits: int = 4, low_bits: Optional[int] = 2,
+              group_size: int = 64) -> "MixedPrecisionWeights":
+        high = QuantizedTensor.quantize(w, high_bits, group_size)
+        low = (QuantizedTensor.quantize(w, low_bits, group_size)
+               if low_bits else None)
+        return cls(high=high, low=low)
+
+    def nbytes(self, precision: str) -> int:
+        if precision == "high":
+            return self.high.nbytes()
+        if precision == "low":
+            return self.low.nbytes() if self.low is not None else 0
+        raise ValueError(precision)

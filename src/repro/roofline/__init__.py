@@ -1,0 +1,9 @@
+from repro.roofline.analysis import (
+    HW,
+    collective_bytes_from_hlo,
+    roofline_terms,
+    model_flops_estimate,
+)
+
+__all__ = ["HW", "collective_bytes_from_hlo", "roofline_terms",
+           "model_flops_estimate"]

@@ -1,0 +1,134 @@
+"""Three-term roofline from compiled dry-run artifacts (no real hardware).
+
+  compute term    = HLO_FLOPs / (chips × peak_FLOP/s)
+  memory term     = HLO_bytes / (chips × HBM_bw)
+  collective term = collective_bytes / (chips × link_bw)
+
+``cost_analysis()`` runs on the SPMD-partitioned per-device module, so its
+FLOPs/bytes are per-device; we multiply by chip count to get cluster totals
+and divide back — i.e. the terms below use per-device numbers against
+per-chip peaks directly. Collective bytes are not in cost_analysis: we parse
+the post-SPMD HLO text and sum the output-shape bytes of every collective op
+(documented proxy: all-gather/all-reduce ≈ output size; reduce-scatter and
+all-to-all move ≈ input size — we take max(input, output) per op).
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Dict, Optional
+
+__all__ = ["HW", "collective_bytes_from_hlo", "roofline_terms",
+           "model_flops_estimate"]
+
+
+@dataclasses.dataclass(frozen=True)
+class HW:
+    """TPU v5e-class constants (per chip)."""
+
+    peak_flops: float = 197e12   # bf16
+    hbm_bw: float = 819e9        # B/s
+    ici_bw: float = 50e9         # B/s per link
+
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8,
+    "c64": 8, "c128": 16, "s4": 1, "u4": 1,
+}
+
+_SHAPE_RE = re.compile(r"(pred|[sufc]\d+|bf16)\[([\d,]*)\]")
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+
+def _shape_bytes(text: str) -> int:
+    """Sum byte sizes of every shape literal in ``text``."""
+    total = 0
+    for dtype, dims in _SHAPE_RE.findall(text):
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES.get(dtype, 4)
+    return total
+
+
+def collective_bytes_from_hlo(hlo_text: str) -> Dict[str, int]:
+    """Per-collective-kind byte totals from post-SPMD HLO text.
+
+    Counts each op once: max(output bytes, operand bytes) as the moved
+    volume proxy.
+    """
+    out: Dict[str, int] = {k: 0 for k in _COLLECTIVES}
+    for line in hlo_text.splitlines():
+        line = line.strip()
+        m = re.match(r"(?:ROOT )?%?[\w.\-]+ = (.*)$", line)
+        if not m:
+            continue
+        rhs = m.group(1)
+        for kind in _COLLECTIVES:
+            # match the op name token, e.g. " all-gather(" or "all-reduce-start("
+            if re.search(rf"\b{kind}(-start)?\(", rhs):
+                paren = rhs.index("(")
+                out_bytes = _shape_bytes(rhs[:paren])
+                in_bytes = _shape_bytes(rhs[paren:])
+                out[kind] += max(out_bytes, in_bytes)
+                break
+    out["total"] = sum(out[k] for k in _COLLECTIVES)
+    return out
+
+
+def roofline_terms(cost: Optional[dict], collective_bytes: int,
+                   hw: HW = HW()) -> Dict[str, float]:
+    """Seconds per term, per step, from per-device cost analysis."""
+    cost = cost or {}
+    flops = float(cost.get("flops", 0.0))
+    bytes_accessed = float(cost.get("bytes accessed", 0.0))
+    t_compute = flops / hw.peak_flops
+    t_memory = bytes_accessed / hw.hbm_bw
+    t_collective = collective_bytes / hw.ici_bw
+    dominant = max(
+        (("compute", t_compute), ("memory", t_memory),
+         ("collective", t_collective)),
+        key=lambda kv: kv[1])[0]
+    return {
+        "flops": flops,
+        "bytes": bytes_accessed,
+        "collective_bytes": float(collective_bytes),
+        "t_compute_s": t_compute,
+        "t_memory_s": t_memory,
+        "t_collective_s": t_collective,
+        "dominant": dominant,
+    }
+
+
+def model_flops_estimate(cfg, *, tokens: int, phase: str) -> float:
+    """MODEL_FLOPS = 6·N·D (dense) / 6·N_active·D (MoE) for the step;
+    decode counts one token per sequence. ``tokens`` = global token count
+    processed by the step. Training multiplies by 3 (fwd+bwd)."""
+    dm, L, V = cfg.d_model, cfg.num_layers, cfg.vocab_size
+    n_layer = 0.0
+    if cfg.has_attention:
+        h, hk, d = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+        n_layer += dm * (h + 2 * hk) * d + h * d * dm
+    if cfg.is_moe:
+        per_expert = 3 * dm * cfg.expert_d_ff
+        n_layer += (cfg.num_experts_per_tok + cfg.num_shared_experts) \
+            * per_expert
+    elif cfg.d_ff:
+        mult = 3 if cfg.mlp_type == "swiglu" else 2
+        n_layer += mult * dm * cfg.d_ff
+    if cfg.ssm_version:
+        di = cfg.d_inner
+        n_layer += 3 * dm * di + di * cfg.ssm_state
+    if cfg.shared_attn_every:
+        n_sites = len(range(0, L, cfg.shared_attn_every))
+        h, hk, d = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+        shared = dm * (h + 2 * hk) * d + h * d * dm + 3 * dm * cfg.d_ff
+        n_layer += shared * n_sites / L
+    n_active = n_layer * L + dm * V  # + unembed
+    total = 2.0 * n_active * tokens          # fwd: 2·N·D
+    if phase == "train":
+        total *= 3.0                          # +bwd ≈ 2× fwd
+    return total

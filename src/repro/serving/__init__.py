@@ -1,0 +1,7 @@
+from repro.serving.cost_model import EdgeProfile, EdgeCostModel
+from repro.serving.engine import DyMoEEngine, EngineConfig, GenerationResult
+from repro.serving.sampler import sample_token
+from repro.serving.request import Request
+
+__all__ = ["EdgeProfile", "EdgeCostModel", "DyMoEEngine", "EngineConfig",
+           "GenerationResult", "sample_token", "Request"]

@@ -1,0 +1,16 @@
+"""Serving request / response records."""
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Optional
+
+__all__ = ["Request"]
+
+
+@dataclasses.dataclass
+class Request:
+    prompt_tokens: List[int]
+    max_new_tokens: int = 32
+    temperature: float = 0.0
+    top_k: int = 0
+    request_id: Optional[str] = None

@@ -1,0 +1,21 @@
+"""Token sampling: greedy / temperature / top-k."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["sample_token"]
+
+
+def sample_token(logits: jnp.ndarray, key=None, *, temperature: float = 0.0,
+                 top_k: int = 0) -> jnp.ndarray:
+    """logits: (B, V) -> (B,) int32."""
+    if temperature <= 0.0:
+        return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    logits = logits / temperature
+    if top_k:
+        vals, _ = jax.lax.top_k(logits, top_k)
+        thresh = vals[..., -1:]
+        logits = jnp.where(logits >= thresh, logits, -jnp.inf)
+    assert key is not None, "sampling requires a PRNG key"
+    return jax.random.categorical(key, logits, axis=-1).astype(jnp.int32)

@@ -1,0 +1,8 @@
+from repro.sharding.partition import (
+    param_shardings,
+    batch_spec,
+    cache_shardings,
+    shard_tree,
+)
+
+__all__ = ["param_shardings", "batch_spec", "cache_shardings", "shard_tree"]

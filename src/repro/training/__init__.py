@@ -1,0 +1,6 @@
+from repro.training.optimizer import AdamW, cosine_lr
+from repro.training.train_loop import TrainLoop, TrainLoopConfig
+from repro.training.checkpoint import save_checkpoint, load_checkpoint
+
+__all__ = ["AdamW", "cosine_lr", "TrainLoop", "TrainLoopConfig",
+           "save_checkpoint", "load_checkpoint"]

@@ -1,0 +1,75 @@
+"""NumPy-backed checkpointing (offline container: no orbax).
+
+Layout: <dir>/step_<N>/
+  manifest.json   — pytree structure + array metadata
+  arrays.npz      — flat arrays keyed by path
+Restores exactly (dtypes preserved, bfloat16 round-tripped via uint16 views).
+"""
+from __future__ import annotations
+
+import json
+import os
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = ["save_checkpoint", "load_checkpoint", "latest_step"]
+
+
+def _flatten(tree) -> Dict[str, Any]:
+    flat = {}
+    for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        key = "/".join(str(getattr(p, "key", getattr(p, "idx", p)))
+                       for p in path)
+        flat[key] = leaf
+    return flat
+
+
+def save_checkpoint(directory: str, step: int, tree) -> str:
+    out = os.path.join(directory, f"step_{step:08d}")
+    os.makedirs(out, exist_ok=True)
+    flat = _flatten(tree)
+    arrays, meta = {}, {}
+    for k, v in flat.items():
+        a = np.asarray(v)
+        if a.dtype == jnp.bfloat16:
+            arrays[k] = a.view(np.uint16)
+            meta[k] = "bfloat16"
+        else:
+            arrays[k] = a
+            meta[k] = str(a.dtype)
+    np.savez(os.path.join(out, "arrays.npz"), **arrays)
+    treedef = jax.tree_util.tree_structure(tree)
+    with open(os.path.join(out, "manifest.json"), "w") as f:
+        json.dump({"step": step, "dtypes": meta,
+                   "treedef": str(treedef)}, f)
+    return out
+
+
+def load_checkpoint(directory: str, step: int, template) -> Tuple[Any, int]:
+    """Restore into the structure of ``template`` (same pytree shape)."""
+    path = os.path.join(directory, f"step_{step:08d}")
+    data = np.load(os.path.join(path, "arrays.npz"))
+    with open(os.path.join(path, "manifest.json")) as f:
+        manifest = json.load(f)
+    flat_t = _flatten(template)
+    restored = {}
+    for k in flat_t:
+        a = data[k]
+        if manifest["dtypes"].get(k) == "bfloat16":
+            a = a.view(jnp.bfloat16)
+        restored[k] = jnp.asarray(a)
+    leaves_order = list(_flatten(template).keys())
+    treedef = jax.tree_util.tree_structure(template)
+    return (jax.tree_util.tree_unflatten(
+        treedef, [restored[k] for k in leaves_order]), manifest["step"])
+
+
+def latest_step(directory: str) -> int:
+    steps = [int(d.split("_")[1]) for d in os.listdir(directory)
+             if d.startswith("step_")]
+    if not steps:
+        raise FileNotFoundError(f"no checkpoints in {directory}")
+    return max(steps)

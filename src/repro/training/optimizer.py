@@ -1,0 +1,71 @@
+"""AdamW with decoupled weight decay + LR schedules (no optax dependency)."""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["AdamW", "cosine_lr", "constant_lr"]
+
+
+class AdamWState(NamedTuple):
+    step: jnp.ndarray
+    mu: Any
+    nu: Any
+
+
+def cosine_lr(peak: float, warmup: int, total: int, floor: float = 0.1
+              ) -> Callable[[jnp.ndarray], jnp.ndarray]:
+    def sched(step):
+        step = step.astype(jnp.float32)
+        warm = peak * jnp.minimum(1.0, step / max(warmup, 1))
+        frac = jnp.clip((step - warmup) / max(total - warmup, 1), 0.0, 1.0)
+        cos = peak * (floor + (1 - floor) * 0.5 * (1 + jnp.cos(jnp.pi * frac)))
+        return jnp.where(step < warmup, warm, cos)
+    return sched
+
+
+def constant_lr(lr: float):
+    return lambda step: jnp.asarray(lr, jnp.float32)
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamW:
+    lr: Callable[[jnp.ndarray], jnp.ndarray]
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.0
+    grad_clip: float = 1.0
+
+    def init(self, params) -> AdamWState:
+        zeros = jax.tree.map(lambda p: jnp.zeros_like(p, jnp.float32), params)
+        return AdamWState(step=jnp.zeros((), jnp.int32), mu=zeros,
+                          nu=jax.tree.map(jnp.copy, zeros))
+
+    def update(self, params, grads, state: AdamWState):
+        grads = jax.tree.map(lambda g: g.astype(jnp.float32), grads)
+        if self.grad_clip:
+            gnorm = jnp.sqrt(sum(
+                jnp.sum(jnp.square(g)) for g in jax.tree.leaves(grads)))
+            scale = jnp.minimum(1.0, self.grad_clip / (gnorm + 1e-9))
+            grads = jax.tree.map(lambda g: g * scale, grads)
+        step = state.step + 1
+        b1, b2 = self.b1, self.b2
+        mu = jax.tree.map(lambda m, g: b1 * m + (1 - b1) * g, state.mu, grads)
+        nu = jax.tree.map(lambda n, g: b2 * n + (1 - b2) * g * g,
+                          state.nu, grads)
+        bc1 = 1 - b1 ** step.astype(jnp.float32)
+        bc2 = 1 - b2 ** step.astype(jnp.float32)
+        lr = self.lr(step)
+
+        def upd(p, m, n):
+            u = (m / bc1) / (jnp.sqrt(n / bc2) + self.eps)
+            if self.weight_decay and p.ndim >= 2:
+                u = u + self.weight_decay * p.astype(jnp.float32)
+            return (p.astype(jnp.float32) - lr * u).astype(p.dtype)
+
+        params = jax.tree.map(upd, params, mu, nu)
+        return params, AdamWState(step=step, mu=mu, nu=nu)

@@ -1,0 +1,76 @@
+"""Training loop: jit'd step (optionally pjit over a mesh), metrics,
+periodic checkpointing. Works for every assigned architecture config.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Callable, Dict, Iterator, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import ModelConfig, init_params
+from repro.models.model import loss_fn
+from repro.training.checkpoint import save_checkpoint
+from repro.training.optimizer import AdamW, cosine_lr
+
+__all__ = ["TrainLoopConfig", "TrainLoop"]
+
+
+@dataclasses.dataclass
+class TrainLoopConfig:
+    steps: int = 100
+    lr: float = 3e-4
+    warmup: int = 20
+    weight_decay: float = 0.01
+    log_every: int = 10
+    checkpoint_every: int = 0  # 0 = only final
+    checkpoint_dir: Optional[str] = None
+    seed: int = 0
+
+
+class TrainLoop:
+    def __init__(self, cfg: ModelConfig, loop_cfg: TrainLoopConfig,
+                 mesh=None, shardings=None):
+        self.cfg = cfg
+        self.loop_cfg = loop_cfg
+        self.optimizer = AdamW(
+            lr=cosine_lr(loop_cfg.lr, loop_cfg.warmup, loop_cfg.steps),
+            weight_decay=loop_cfg.weight_decay)
+        self.mesh = mesh
+        self.params = init_params(cfg, jax.random.PRNGKey(loop_cfg.seed))
+        self.opt_state = self.optimizer.init(self.params)
+        self.history: list = []
+
+        def step(params, opt_state, batch):
+            (loss, metrics), grads = jax.value_and_grad(
+                loss_fn, has_aux=True)(params, cfg, batch)
+            params, opt_state = self.optimizer.update(params, grads,
+                                                      opt_state)
+            return params, opt_state, dict(metrics, loss=loss)
+
+        self._step = jax.jit(step)
+
+    def run(self, batches: Iterator[Dict[str, Any]],
+            callback: Optional[Callable[[int, Dict], None]] = None) -> Dict:
+        lc = self.loop_cfg
+        t0 = time.perf_counter()
+        metrics = {}
+        for i in range(lc.steps):
+            batch = {k: jnp.asarray(v) for k, v in next(batches).items()}
+            self.params, self.opt_state, metrics = self._step(
+                self.params, self.opt_state, batch)
+            if lc.log_every and i % lc.log_every == 0:
+                m = {k: float(v) for k, v in metrics.items()}
+                self.history.append(dict(m, step=i))
+                if callback:
+                    callback(i, m)
+            if (lc.checkpoint_every and lc.checkpoint_dir
+                    and i and i % lc.checkpoint_every == 0):
+                save_checkpoint(lc.checkpoint_dir, i, self.params)
+        if lc.checkpoint_dir:
+            save_checkpoint(lc.checkpoint_dir, lc.steps, self.params)
+        wall = time.perf_counter() - t0
+        return dict({k: float(v) for k, v in metrics.items()},
+                    wall_s=wall, steps=lc.steps)

@@ -1,0 +1,9 @@
+import os
+
+# Keep smoke tests on the single real CPU device (the 512-device override is
+# dryrun.py-only, per the multi-pod dry-run contract).
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+import jax  # noqa: E402
+
+jax.config.update("jax_enable_x64", False)

@@ -1,0 +1,85 @@
+"""Mixed-precision LRU cache: the paper's three rules (§4.4.2) + invariants."""
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.cache import MixedPrecisionLRUCache
+
+HB, LB = 100, 30  # bytes per precision
+
+
+def mk(capacity=1000):
+    return MixedPrecisionLRUCache(capacity)
+
+
+def test_miss_then_hit():
+    c = mk()
+    _, missed = c.get(("l0", 0), "high", nbytes=HB)
+    assert missed == HB
+    _, missed = c.get(("l0", 0), "high", nbytes=HB)
+    assert missed == 0
+    assert c.stats.hits == 1 and c.stats.misses == 1
+
+
+def test_no_duplication():
+    c = mk()
+    c.get((0, 0), "low", nbytes=LB)
+    c.get((0, 0), "high", nbytes=HB)
+    assert c.used_bytes == HB  # low copy evicted, not duplicated
+    assert c.resident_precision((0, 0)) == "high"
+
+
+def test_precision_promotion_is_miss():
+    c = mk()
+    c.get((0, 0), "low", nbytes=LB)
+    _, missed = c.get((0, 0), "high", nbytes=HB)
+    assert missed == HB
+    assert c.stats.promotions == 1
+
+
+def test_conservative_reuse_is_hit():
+    c = mk()
+    c.get((0, 0), "high", nbytes=HB)
+    _, missed = c.get((0, 0), "low", nbytes=LB)
+    assert missed == 0
+    assert c.stats.conservative_reuses == 1
+    assert c.resident_precision((0, 0)) == "high"  # kept, not downgraded
+
+
+def test_lru_eviction_order():
+    c = mk(capacity=250)
+    c.get((0, 0), "high", nbytes=HB)
+    c.get((0, 1), "high", nbytes=HB)
+    c.get((0, 0), "high", nbytes=HB)   # touch 0 -> 1 is now LRU
+    c.get((0, 2), "high", nbytes=HB)   # evicts 1
+    assert (0, 1) not in c
+    assert (0, 0) in c and (0, 2) in c
+
+
+def test_prefetch_counts_separately():
+    c = mk()
+    n = c.prefetch((1, 5), "high", nbytes=HB)
+    assert n == HB and c.stats.prefetch_bytes == HB
+    _, missed = c.get((1, 5), "high", nbytes=HB)
+    assert missed == 0  # prefetched => hit on use
+
+
+def test_entry_larger_than_capacity_rejected():
+    c = mk(capacity=50)
+    with pytest.raises(ValueError):
+        c.get((0, 0), "high", nbytes=HB)
+
+
+@given(ops=st.lists(
+    st.tuples(st.integers(0, 7), st.sampled_from(["high", "low"]),
+              st.booleans()), min_size=1, max_size=200))
+@settings(max_examples=50, deadline=None)
+def test_invariants_under_random_workload(ops):
+    c = mk(capacity=350)
+    for expert, prec, is_prefetch in ops:
+        nbytes = HB if prec == "high" else LB
+        if is_prefetch:
+            c.prefetch((0, expert), prec, nbytes=nbytes)
+        else:
+            c.get((0, expert), prec, nbytes=nbytes)
+        c.invariant_check()
+        assert c.used_bytes <= 350

@@ -1,0 +1,112 @@
+"""DyMoE end-to-end semantics: precision spectrum, retention knob, depth
+schedule effects on real (tiny) models — the mechanisms behind paper
+Tables 1-2 / Fig. 11."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.models import init_params, prefill, quantize_model
+from repro.models.config import DyMoEPolicy, ModelConfig
+
+
+def _moe_cfg(**pol):
+    return ModelConfig(
+        name="t", arch_type="moe", num_layers=2, d_model=64, vocab_size=256,
+        num_heads=4, num_kv_heads=2, head_dim=16, num_experts=8,
+        num_experts_per_tok=2, moe_d_ff=64, capacity_factor=4.0,
+        dtype="float32", remat="none",
+        dymoe=DyMoEPolicy(**pol))
+
+
+@pytest.fixture(scope="module")
+def setup():
+    cfg = _moe_cfg(low_bits=2, retention=0.75)
+    key = jax.random.PRNGKey(0)
+    params = init_params(cfg, key)
+    toks = jax.random.randint(key, (2, 32), 0, cfg.vocab_size)
+    ref_logits, _, _ = prefill(params, cfg, toks, cache_slots=64)
+    return cfg, params, toks, np.asarray(ref_logits)
+
+
+def _run(cfg, params, toks):
+    qp = quantize_model(params, cfg)
+    logits, _, info = prefill(params, cfg, toks, qparams=qp, cache_slots=64)
+    return np.asarray(logits), info
+
+
+def test_retention_1_matches_uniform_high(setup):
+    """r=1.0 -> every expert Critical -> exactly the uniform int4 model."""
+    cfg, params, toks, ref = setup
+    cfg_full = dataclasses.replace(cfg, dymoe=DyMoEPolicy(low_bits=2,
+                                                          retention=1.0))
+    logits_full, info = _run(cfg_full, params, toks)
+    assert np.asarray(info.critical_masks).all()
+    cfg_low0 = dataclasses.replace(cfg, dymoe=DyMoEPolicy(low_bits=0,
+                                                          retention=1.0))
+    logits_skip, _ = _run(cfg_low0, params, toks)
+    # with r=1 nothing is skipped, so 4/2 and 4/0 agree exactly
+    np.testing.assert_allclose(logits_full, logits_skip, atol=1e-5)
+
+
+def test_quantization_error_ordering(setup):
+    """|logits - ref| grows as retention drops: 4/2(r=1) <= 4/2(r=.6).
+    4/2 vs 4/0 at equal r is model-dependent (paper Table 2: Mixtral favors
+    4/2, Qwen3-30B favors 4/0), so we only require both to be in the same
+    regime rather than strictly ordered."""
+    cfg, params, toks, ref = setup
+
+    def err(low_bits, retention):
+        c = dataclasses.replace(cfg, dymoe=DyMoEPolicy(
+            low_bits=low_bits, retention=retention))
+        lg, _ = _run(c, params, toks)
+        return np.abs(lg - ref).mean()
+
+    e_full = err(2, 1.0)
+    e_42 = err(2, 0.6)
+    e_40 = err(0, 0.6)
+    assert e_full <= e_42 + 1e-6
+    assert e_full <= e_40 + 1e-6
+    assert 0.2 <= e_42 / max(e_40, 1e-9) <= 5.0
+
+
+def test_depth_schedule_assigns_more_critical_to_shallow(setup):
+    cfg, params, toks, _ = setup
+    c = dataclasses.replace(cfg, num_layers=2, dymoe=DyMoEPolicy(
+        low_bits=2, retention=0.6))
+    _, info = _run(c, params, toks)
+    counts = np.asarray(info.critical_masks).sum(-1)
+    assert counts[0] >= counts[-1]  # shallow layer keeps more experts
+
+
+def test_info_telemetry_shapes(setup):
+    cfg, params, toks, _ = setup
+    _, info = _run(cfg, params, toks)
+    L, E = cfg.num_layers, cfg.num_experts
+    assert info.critical_masks.shape == (L, E)
+    assert info.expert_hh_load.shape == (L, E)
+    assert info.predicted_next.shape == (L, E)
+    assert info.token_importance.shape == (2, 32)
+    # heavy-hitter loads are bounded by total heavy hitters
+    assert float(np.asarray(info.expert_hh_load).sum(-1).max()) <= \
+        2 * 32 * cfg.num_experts_per_tok
+
+
+def test_dense_arch_layer_tiering():
+    """Non-MoE archs get depth-aware layer precision tiers (DESIGN.md
+    §Arch-applicability): shallow layers high-bit, deep layers low-bit."""
+    cfg = ModelConfig(
+        name="d", arch_type="dense", num_layers=2, d_model=64,
+        vocab_size=256, num_heads=4, num_kv_heads=2, head_dim=16, d_ff=128,
+        dtype="float32", remat="none",
+        dymoe=DyMoEPolicy(low_bits=2, retention=0.6))
+    key = jax.random.PRNGKey(1)
+    params = init_params(cfg, key)
+    toks = jax.random.randint(key, (2, 16), 0, cfg.vocab_size)
+    ref, _, _ = prefill(params, cfg, toks, cache_slots=32)
+    qp = quantize_model(params, cfg)
+    lg, _, _ = prefill(params, cfg, toks, qparams=qp, cache_slots=32)
+    err = np.abs(np.asarray(lg) - np.asarray(ref)).mean()
+    assert 0 < err < 1.0  # quantized, but not destroyed

@@ -1,0 +1,62 @@
+"""Phase-adaptive importance estimation (paper Eq. 1-3) + critical select."""
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core.importance import (
+    decode_expert_importance,
+    heavy_hitter_mask,
+    prefill_expert_importance,
+    select_critical,
+)
+
+
+def test_heavy_hitter_mask_topk():
+    ti = jnp.asarray([0.1, 0.9, 0.5, 0.2, 0.8, 0.05, 0.3, 0.4])
+    m = np.asarray(heavy_hitter_mask(ti, frac=0.25))
+    assert m.sum() == 2
+    assert m[1] == 1 and m[4] == 1
+
+
+def test_heavy_hitter_mask_batched():
+    ti = jnp.asarray([[0.1, 0.9, 0.5, 0.2], [0.8, 0.05, 0.3, 0.4]])
+    m = np.asarray(heavy_hitter_mask(ti, frac=0.5))
+    assert m.shape == (2, 4)
+    assert (m.sum(-1) == 2).all()
+
+
+def test_prefill_importance_ranks_by_hh_load():
+    hh = jnp.asarray([5.0, 1.0, 3.0, 0.0])
+    load = jnp.asarray([10.0, 50.0, 10.0, 100.0])
+    imp = np.asarray(prefill_expert_importance(hh, load))
+    # heavy-hitter load dominates; total load only breaks ties
+    assert imp.argmax() == 0
+    assert imp[2] > imp[1]
+
+
+def test_decode_importance_is_gate():
+    g = jnp.asarray([0.4, 0.1, 0.5])
+    np.testing.assert_array_equal(np.asarray(decode_expert_importance(g)),
+                                  np.asarray(g))
+
+
+@given(e=st.integers(2, 32), t=st.integers(1, 32),
+       seed=st.integers(0, 10000))
+@settings(max_examples=50, deadline=None)
+def test_select_critical_exact_count(e, t, seed):
+    rng = np.random.default_rng(seed)
+    imp = jnp.asarray(rng.standard_normal(e))
+    mask = np.asarray(select_critical(imp, t))
+    assert mask.sum() == min(max(t, 1), e)
+
+
+def test_select_critical_picks_top():
+    imp = jnp.asarray([0.1, 0.9, 0.3, 0.7])
+    mask = np.asarray(select_critical(imp, 2))
+    assert mask.tolist() == [False, True, False, True]
+
+
+def test_select_critical_tie_break_deterministic():
+    imp = jnp.asarray([0.5, 0.5, 0.5, 0.5])
+    mask = np.asarray(select_critical(imp, 2))
+    assert mask.sum() == 2

@@ -1,0 +1,66 @@
+"""quant_matmul Pallas kernel vs pure-jnp oracle (interpret mode), swept
+over shapes / bit-widths / block shapes / dtypes."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.quant_matmul.ops import quant_matmul
+from repro.kernels.quant_matmul.ref import quant_matmul_ref
+from repro.quant import QuantizedTensor
+
+
+def _case(m, k, n, bits, group, bm, bn, bk, seed=0, dtype=jnp.float32):
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.standard_normal((m, k)), dtype)
+    w = jnp.asarray(rng.standard_normal((k, n)), jnp.float32)
+    qt = QuantizedTensor.quantize(w, bits, group)
+    ref = quant_matmul_ref(x, qt.packed, qt.scales, bits=bits,
+                           group_size=group, out_dtype=jnp.float32)
+    pal = quant_matmul(x, qt, impl="pallas", interpret=True, block_m=bm,
+                       block_n=bn, block_k=bk, out_dtype=jnp.float32)
+    np.testing.assert_allclose(np.asarray(ref), np.asarray(pal),
+                               atol=5e-4, rtol=1e-4)
+
+
+@pytest.mark.parametrize("bits", [2, 4, 8])
+def test_bits_sweep(bits):
+    _case(16, 128, 32, bits, 32, 8, 16, 64)
+
+
+@pytest.mark.parametrize("m,k,n", [(8, 64, 16), (32, 256, 64), (1, 128, 8)])
+def test_shape_sweep(m, k, n):
+    _case(m, k, n, 4, 32, min(8, m), 8, 64)
+
+
+@pytest.mark.parametrize("bm,bn,bk", [(4, 8, 32), (16, 16, 128),
+                                      (8, 32, 64)])
+def test_block_sweep(bm, bn, bk):
+    _case(16, 128, 32, 4, 32, bm, bn, bk)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_dtype_sweep(dtype):
+    rng = np.random.default_rng(4)
+    x = jnp.asarray(rng.standard_normal((8, 64)), dtype)
+    w = jnp.asarray(rng.standard_normal((64, 16)), jnp.float32)
+    qt = QuantizedTensor.quantize(w, 4, 32)
+    ref = quant_matmul(x, qt, impl="ref", out_dtype=jnp.float32)
+    pal = quant_matmul(x, qt, impl="pallas", interpret=True, block_m=8,
+                       block_n=16, block_k=32, out_dtype=jnp.float32)
+    np.testing.assert_allclose(np.asarray(ref, np.float32),
+                               np.asarray(pal, np.float32),
+                               atol=2e-2, rtol=2e-2)
+
+
+def test_multi_k_blocks_accumulate():
+    # K split across 4 grid steps exercises the scratch accumulator path
+    _case(8, 512, 16, 4, 64, 8, 16, 128)
+
+
+def test_leading_dims_reshape():
+    rng = np.random.default_rng(5)
+    x = jnp.asarray(rng.standard_normal((2, 3, 64)), jnp.float32)
+    w = jnp.asarray(rng.standard_normal((64, 16)), jnp.float32)
+    qt = QuantizedTensor.quantize(w, 4, 32)
+    y = quant_matmul(x, qt, impl="ref", out_dtype=jnp.float32)
+    assert y.shape == (2, 3, 16)

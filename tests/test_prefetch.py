@@ -1,0 +1,44 @@
+"""Look-ahead prefetching (paper Eq. 6-8) and inter-layer similarity."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.prefetch import (
+    layer_similarity,
+    predict_next_gates,
+    prefetch_targets,
+)
+
+
+def test_predict_next_gates_softmax():
+    h = jnp.ones((4, 8))
+    w = jax.random.normal(jax.random.PRNGKey(0), (8, 6))
+    g = predict_next_gates(h, w)
+    assert g.shape == (4, 6)
+    np.testing.assert_allclose(np.asarray(g.sum(-1)), 1.0, rtol=1e-5)
+
+
+def test_prefetch_decode_reduces_to_eq8():
+    """T=1: token-frequency prefetch == direct top-t of predicted gates."""
+    g = jnp.asarray([[0.05, 0.4, 0.1, 0.3, 0.15]])
+    ids, freq = prefetch_targets(g, k=2, t=2)
+    assert set(np.asarray(ids).tolist()) == {1, 3}
+
+
+def test_prefetch_prefill_aggregates_over_tokens():
+    # two tokens predict expert 0; one predicts expert 2 -> 0 wins
+    g = jnp.asarray([[0.9, 0.1, 0.0],
+                     [0.8, 0.2, 0.0],
+                     [0.1, 0.0, 0.9]])
+    ids, freq = prefetch_targets(g, k=1, t=1)
+    assert int(ids[0]) == 0
+    assert freq[0] > freq[2] > freq[1]
+
+
+def test_layer_similarity_range():
+    a = jax.random.normal(jax.random.PRNGKey(1), (4, 16, 32))
+    assert float(layer_similarity(a, a)) > 0.999
+    assert abs(float(layer_similarity(a, -a)) + 1.0) < 1e-5
+    # residual-stream-like update keeps similarity high (paper Fig. 6)
+    b = a + 0.1 * jax.random.normal(jax.random.PRNGKey(2), a.shape)
+    assert float(layer_similarity(a, b)) > 0.9

@@ -1,0 +1,90 @@
+"""Quantization substrate: packing round-trips, RTN error bounds, GPTQ-lite."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.quant import (
+    QuantizedTensor,
+    MixedPrecisionWeights,
+    dequantize_groupwise,
+    gptq_lite_quantize,
+    pack_bits,
+    quantize_groupwise,
+    unpack_bits,
+)
+
+
+@pytest.mark.parametrize("bits", [2, 4, 8])
+def test_pack_unpack_roundtrip(bits):
+    rng = np.random.default_rng(0)
+    lo, hi = -(1 << (bits - 1)), (1 << (bits - 1)) - 1
+    v = rng.integers(lo, hi + 1, size=(7, 16)).astype(np.int8)
+    out = np.asarray(unpack_bits(pack_bits(jnp.asarray(v), bits), bits))
+    np.testing.assert_array_equal(out, v)
+
+
+@given(bits=st.sampled_from([2, 4, 8]),
+       rows=st.integers(1, 5),
+       cols=st.sampled_from([8, 16, 32]),
+       seed=st.integers(0, 2**31 - 1))
+@settings(max_examples=40, deadline=None)
+def test_pack_unpack_roundtrip_property(bits, rows, cols, seed):
+    rng = np.random.default_rng(seed)
+    lo, hi = -(1 << (bits - 1)), (1 << (bits - 1)) - 1
+    v = rng.integers(lo, hi + 1, size=(rows, cols)).astype(np.int8)
+    out = np.asarray(unpack_bits(pack_bits(jnp.asarray(v), bits), bits))
+    np.testing.assert_array_equal(out, v)
+
+
+@pytest.mark.parametrize("bits", [2, 4, 8])
+@pytest.mark.parametrize("group", [16, 64])
+def test_rtn_error_bound(bits, group):
+    """RTN guarantees |w - deq(w)| <= scale/2 elementwise (up to fp eps)."""
+    rng = np.random.default_rng(1)
+    w = jnp.asarray(rng.standard_normal((128, 32)), jnp.float32)
+    q, scales = quantize_groupwise(w, bits, group)
+    deq = dequantize_groupwise(q, scales, group, jnp.float32)
+    err = np.abs(np.asarray(deq) - np.asarray(w))
+    bound = np.repeat(np.asarray(scales), group, axis=-2) / 2 + 1e-6
+    assert (err <= bound).all()
+
+
+def test_quantized_tensor_shapes():
+    w = jnp.zeros((2, 128, 64))  # batched (E, K, N)
+    for bits, kp in [(8, 128), (4, 64), (2, 32)]:
+        qt = QuantizedTensor.quantize(w, bits, 32)
+        assert qt.packed.shape == (2, 64, kp)
+        assert qt.scales.shape == (2, 4, 64)
+        assert qt.dequantize().shape == (2, 128, 64)
+
+
+def test_higher_bits_lower_error():
+    rng = np.random.default_rng(2)
+    w = jnp.asarray(rng.standard_normal((256, 64)), jnp.float32)
+    errs = []
+    for bits in (2, 4, 8):
+        qt = QuantizedTensor.quantize(w, bits, 64)
+        errs.append(float(jnp.abs(qt.dequantize(jnp.float32) - w).mean()))
+    assert errs[0] > errs[1] > errs[2]
+
+
+def test_gptq_lite_not_worse_than_rtn():
+    rng = np.random.default_rng(3)
+    w = jnp.asarray(rng.standard_normal((128, 32)), jnp.float32)
+    q0, s0 = quantize_groupwise(w, 2, 32)
+    e0 = float(jnp.abs(dequantize_groupwise(q0, s0, 32, jnp.float32) - w
+                       ).mean())
+    q1, s1 = gptq_lite_quantize(w, 2, 32, n_iter=3)
+    e1 = float(jnp.abs(dequantize_groupwise(q1, s1, 32, jnp.float32) - w
+                       ).mean())
+    assert e1 <= e0 * 1.05  # error-feedback should not regress materially
+
+
+def test_mixed_precision_weights():
+    w = jnp.ones((64, 32))
+    mp = MixedPrecisionWeights.build(w, 4, 2, 32)
+    assert mp.high.bits == 4 and mp.low.bits == 2
+    assert mp.nbytes("high") > mp.nbytes("low")
+    mp0 = MixedPrecisionWeights.build(w, 4, None, 32)
+    assert mp0.low is None and mp0.nbytes("low") == 0

@@ -1,0 +1,57 @@
+"""Depth-aware schedule (paper Eq. 4-5) properties."""
+import math
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.schedule import (
+    critical_counts,
+    lambda_for_mean_retention,
+    retention_ratio,
+    retention_profile,
+)
+
+
+def test_eq4_exact_values():
+    # r(0) = 1, r(L-1) = lambda for the cosine schedule
+    for lam in (0.0, 0.3, 0.8):
+        assert retention_ratio(0, 10, lam) == pytest.approx(1.0)
+        assert retention_ratio(9, 10, lam) == pytest.approx(lam)
+
+
+@given(lam=st.floats(0.0, 1.0), L=st.integers(2, 128))
+@settings(max_examples=50, deadline=None)
+def test_cosine_monotone_decreasing_and_bounded(lam, L):
+    prof = retention_profile(L, lam)
+    assert (prof[:-1] - prof[1:] >= -1e-12).all()  # non-increasing
+    assert (prof >= lam - 1e-12).all() and (prof <= 1.0 + 1e-12).all()
+
+
+def test_slow_start_vs_linear():
+    """Paper: cosine preserves shallow layers better than linear decay."""
+    L, lam = 32, 0.2
+    cos = retention_profile(L, lam, "cosine")
+    lin = retention_profile(L, lam, "linear")
+    shallow = slice(0, L // 4)
+    assert cos[shallow].mean() > lin[shallow].mean()
+
+
+def test_mean_retention_lambda_inverse():
+    for target in (0.6, 0.75, 0.9, 1.0):
+        lam = lambda_for_mean_retention(target)
+        prof = retention_profile(64, lam)
+        assert prof.mean() == pytest.approx(target, abs=0.02)
+
+
+def test_critical_counts_eq5():
+    t = critical_counts(4, 8, lam=0.5)
+    assert len(t) == 4
+    assert t[0] == 8  # ceil(1.0 * 8)
+    assert all(1 <= x <= 8 for x in t)
+    assert list(t) == sorted(t, reverse=True)
+
+
+def test_equal_schedule_constant():
+    t = critical_counts(6, 8, lam=0.5, kind="equal")
+    assert len(set(t)) == 1

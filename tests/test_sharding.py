@@ -1,0 +1,70 @@
+"""Partitioning rules: spec assignment, divisibility guards, and a real
+pjit lowering on the local (1-device) mesh for a reduced config."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+from repro.configs import get_config
+from repro.launch.mesh import make_local_mesh
+from repro.models import init_params, loss_fn
+from repro.sharding.partition import batch_spec, guard_spec, param_shardings
+
+
+def test_guard_spec_drops_indivisible():
+    mesh = make_local_mesh()  # (n,1): model axis size 1 divides everything
+    spec = guard_spec(P("data", "model"), (3, 8), mesh)
+    # data axis size = device count; 3 is divisible only if 1 device
+    n = len(jax.devices())
+    expected0 = "data" if 3 % n == 0 else None
+    assert spec[0] == expected0
+
+
+def test_param_shardings_structure():
+    cfg = get_config("olmoe_1b_7b").reduced()
+    params = jax.eval_shape(
+        lambda k: init_params(cfg, k), jax.random.PRNGKey(0))
+    mesh = make_local_mesh()
+    sh = param_shardings(params, mesh)
+    # same tree structure
+    assert jax.tree_util.tree_structure(sh) == \
+        jax.tree_util.tree_structure(params)
+
+
+def test_expert_parallel_rule():
+    cfg = get_config("olmoe_1b_7b").reduced()
+    params = jax.eval_shape(
+        lambda k: init_params(cfg, k), jax.random.PRNGKey(0))
+    mesh = make_local_mesh()
+    sh = param_shardings(params, mesh, expert_parallel=True)
+    spec = sh["layers"]["moe"]["w_gate"].spec
+    # stacked (L, E, dm, dff): EP rule puts "model" on E (dim 1)
+    assert spec[1] == "model" or spec[1] is None  # guard may drop on 1-dev
+
+
+def test_batch_spec_axes():
+    mesh = make_local_mesh()
+    assert batch_spec(mesh) == "data"
+
+
+def test_lowering_on_local_mesh():
+    """End-to-end pjit lowering of a reduced train step with real specs."""
+    cfg = get_config("qwen3_0p6b").reduced()
+    mesh = make_local_mesh()
+    params_s = jax.eval_shape(
+        lambda k: init_params(cfg, k), jax.random.PRNGKey(0))
+    p_shard = param_shardings(params_s, mesh)
+    batch = {
+        "tokens": jax.ShapeDtypeStruct((2, 16), jnp.int32),
+        "labels": jax.ShapeDtypeStruct((2, 16), jnp.int32),
+    }
+    b_shard = jax.tree.map(
+        lambda _: jax.NamedSharding(mesh, P(None, None)), batch)
+
+    def step(params, batch):
+        return loss_fn(params, cfg, batch)[0]
+
+    lowered = jax.jit(step, in_shardings=(p_shard, b_shard)).lower(
+        params_s, batch)
+    compiled = lowered.compile()
+    assert compiled.cost_analysis() is not None
