@@ -13,11 +13,15 @@ Baseline systems are modeled by their defining mechanism:
 from __future__ import annotations
 
 import dataclasses
+import functools
 from typing import List
 
+import jax.numpy as jnp
 import numpy as np
 
 from benchmarks.common import zipf_routing_trace
+from repro.kernels.quant_matmul.ops import expert_quant_matmul
+from repro.quant import MixedPrecisionWeights
 from repro.configs import get_config
 from repro.core.orchestrator import DynamicExpertOrchestrator, \
     OrchestratorConfig
@@ -28,38 +32,53 @@ DECODE_STEPS = 32
 PREFILL_LEN = 512
 
 
+# single source of truth for each modeled system: the (hi, lo) bit widths
+# its experts execute at + its defining orchestration mechanisms. Byte
+# accounting, the oracle check, and the orchestrator config all derive
+# from this table so they cannot drift apart.
+_SYSTEMS = {
+    "accelerate": dict(bits=(4, 4), enable_cache=False,
+                       enable_prefetch=False, enable_dyquant=False),
+    "mixtral-offloading": dict(bits=(4, 4), enable_cache=True,
+                               enable_prefetch=False, enable_dyquant=False),
+    "moe-infinity": dict(bits=(16, 16), enable_cache=True,
+                         enable_prefetch=True, enable_dyquant=False),
+    "dymoe-4/2": dict(bits=(4, 2), enable_cache=True, enable_prefetch=True,
+                      enable_dyquant=True),
+    "dymoe-4/0": dict(bits=(4, 0), low_is_skip=True, enable_cache=True,
+                      enable_prefetch=True, enable_dyquant=True),
+}
+
+
 def _system(name: str, cfg, vram_gb: int) -> OrchestratorConfig:
     pol = cfg.dymoe
-    base = dict(
+    spec = dict(_SYSTEMS[name])
+    hi, lo = spec.pop("bits")
+    return OrchestratorConfig(
         num_layers=cfg.num_layers, num_experts=cfg.num_experts,
         experts_per_token=cfg.num_experts_per_tok,
         vram_budget_bytes=int((vram_gb << 30) * 0.6),
-        pcie_bw=16e9, prefetch_topk=pol.prefetch_topk)
-    b4 = expert_bytes(cfg, 4)
-    b2 = expert_bytes(cfg, 2)
-    b16 = expert_bytes(cfg, 16)
-    if name == "accelerate":
-        return OrchestratorConfig(bytes_high=b4, bytes_low=b4,
-                                  enable_cache=False, enable_prefetch=False,
-                                  enable_dyquant=False, **base)
-    if name == "mixtral-offloading":
-        return OrchestratorConfig(bytes_high=b4, bytes_low=b4,
-                                  enable_cache=True, enable_prefetch=False,
-                                  enable_dyquant=False, **base)
-    if name == "moe-infinity":
-        return OrchestratorConfig(bytes_high=b16, bytes_low=b16,
-                                  enable_cache=True, enable_prefetch=True,
-                                  enable_dyquant=False, **base)
-    if name == "dymoe-4/2":
-        return OrchestratorConfig(bytes_high=b4, bytes_low=b2,
-                                  enable_cache=True, enable_prefetch=True,
-                                  enable_dyquant=True, **base)
-    if name == "dymoe-4/0":
-        return OrchestratorConfig(bytes_high=b4, bytes_low=0,
-                                  low_is_skip=True, enable_cache=True,
-                                  enable_prefetch=True, enable_dyquant=True,
-                                  **base)
-    raise ValueError(name)
+        pcie_bw=16e9, prefetch_topk=pol.prefetch_topk,
+        bytes_high=expert_bytes(cfg, hi),
+        bytes_low=expert_bytes(cfg, lo) if lo else 0,
+        **spec)
+
+
+@functools.lru_cache(maxsize=None)
+def _grouped_kernel_oracle_err(hi_bits: int, lo_bits: int) -> float:
+    """Interpret-mode oracle check of the grouped kernel at the bit pair a
+    system deploys — evidence the modeled bytes describe a correct kernel."""
+    rng = np.random.default_rng(7)
+    e, m, k, n = 4, 8, 128, 32
+    x = jnp.asarray(rng.standard_normal((e, m, k)), jnp.float32)
+    w = jnp.asarray(rng.standard_normal((e, k, n)), jnp.float32)
+    mp = MixedPrecisionWeights.build(w, hi_bits, lo_bits or None, 64)
+    mask = jnp.arange(e) % 2 == 0
+    ref = expert_quant_matmul(x, mp, mask, impl="ref", out_dtype=jnp.float32)
+    pal = expert_quant_matmul(x, mp, mask, impl="pallas", interpret=True,
+                              block_m=8, block_n=16, block_k=64,
+                              out_dtype=jnp.float32)
+    return float(jnp.abs(ref - pal).max())
 
 
 def _run_system(name: str, cfg, vram_gb: int, seed: int = 0):
@@ -101,6 +120,7 @@ def _run_system(name: str, cfg, vram_gb: int, seed: int = 0):
     steps: List[float] = []
     masks = list(trace)
     rng = np.random.default_rng(seed + 1)
+    wbytes = 0
     for t in range(DECODE_STEPS):
         active = list(masks[t])
         crit = crit_from(masks[t])
@@ -112,9 +132,15 @@ def _run_system(name: str, cfg, vram_gb: int, seed: int = 0):
             active_experts_hi=int(c.sum()),
             active_experts_lo=int(a.sum()) - int((c & a).sum()),
             tokens_routed=1) for c, a in zip(crit, active)]
+        # packed bytes this step's grouped quant-matmuls read, at the
+        # system's deployed bit widths (skip => sub-critical moves nothing)
+        wbytes += sum(
+            int((c & a).sum()) * ocfg.bytes_high
+            + (int(a.sum()) - int((c & a).sum())) * ocfg.bytes_low
+            for c, a in zip(crit, active))
         steps.append(orch.step(crit, active, pred, compute).total_s)
     tpot = float(np.mean(steps))
-    return ttft, tpot, orch.cache.stats
+    return ttft, tpot, orch.cache.stats, wbytes / DECODE_STEPS
 
 
 def run() -> List[dict]:
@@ -125,12 +151,17 @@ def run() -> List[dict]:
         for vram in budgets:
             for sysname in ("accelerate", "mixtral-offloading",
                             "moe-infinity", "dymoe-4/2", "dymoe-4/0"):
-                ttft, tpot, stats = _run_system(sysname, cfg, vram)
+                ttft, tpot, stats, wb_tok = _run_system(sysname, cfg, vram)
+                hi_b, lo_b = _SYSTEMS[sysname]["bits"]
+                err = (_grouped_kernel_oracle_err(hi_b, lo_b)
+                       if hi_b <= 8 else None)
                 rows.append(dict(
                     bench="e2e_latency", arch=cfg.name, vram_gb=vram,
                     system=sysname, ttft_s=round(ttft, 4),
                     tpot_s=round(tpot, 5),
-                    hit_rate=round(stats.hit_rate, 3)))
+                    hit_rate=round(stats.hit_rate, 3),
+                    weight_mb_per_tok=round(wb_tok / 2**20, 2),
+                    kernel_oracle_err=err))
     return rows
 
 

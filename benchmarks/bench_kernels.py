@@ -1,25 +1,44 @@
 """Kernel-level microbenchmark: quant_matmul traffic model + oracle match.
 
-On this CPU container the Pallas kernel runs in interpret mode (Python), so
+On this CPU container the Pallas kernels run in interpret mode (Python), so
 wall-clock is meaningless for the TPU target; what IS meaningful and
 reported here:
-  * correctness (max |err| vs the jnp oracle) across bit widths,
-  * the HBM traffic ratio each bit width implies (the quantity DyMoE's
-    latency model rides on): bytes(int_b) / bytes(bf16).
+  * correctness (max |err| vs the jnp oracle) across bit widths — the ref
+    and interpret-mode timings are reported SEPARATELY and labeled as such,
+  * the HBM traffic each configuration implies (the quantity DyMoE's
+    latency model rides on). For the grouped ``expert_quant_matmul`` rows
+    the bytes-moved column follows the critical mask: each Critical expert
+    moves its high-bit packed blob, each Sub-critical one its low-bit blob
+    (or nothing in the "4/0" skip deployment) — ≈ bits/16 of the bf16
+    baseline per expert plus scales, versus the 2x-bf16 the old
+    dequantize-everything-and-where path materialized.
 """
 from __future__ import annotations
 
+import functools
 import time
 from typing import List
 
+import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.kernels.quant_matmul.ops import quant_matmul
-from repro.quant import QuantizedTensor
+from repro.kernels.quant_matmul.ops import expert_quant_matmul, quant_matmul
+from repro.quant import MixedPrecisionWeights, QuantizedTensor
 
 
-def run() -> List[dict]:
+def _time_us(fn, *args, **kwargs):
+    """(steady-state us of one jitted call, its output) — compile paid in
+    warmup; the warmup output doubles as the value for the oracle check."""
+    jfn = jax.jit(functools.partial(fn, **kwargs))
+    out = jfn(*args)
+    out.block_until_ready()                          # warmup / compile
+    t0 = time.perf_counter()
+    jfn(*args).block_until_ready()
+    return (time.perf_counter() - t0) * 1e6, out
+
+
+def run_dense() -> List[dict]:
     rng = np.random.default_rng(0)
     m, k, n = 64, 1024, 256
     x = jnp.asarray(rng.standard_normal((m, k)), jnp.float32)
@@ -28,20 +47,59 @@ def run() -> List[dict]:
     rows = []
     for bits in (8, 4, 2):
         qt = QuantizedTensor.quantize(w, bits, 64)
-        t0 = time.perf_counter()
-        ref = quant_matmul(x, qt, impl="ref", out_dtype=jnp.float32)
-        ref.block_until_ready()
-        t_ref = (time.perf_counter() - t0) * 1e6
-        pal = quant_matmul(x, qt, impl="pallas", interpret=True,
-                           block_m=32, block_n=64, block_k=256,
-                           out_dtype=jnp.float32)
+        t_ref, ref = _time_us(quant_matmul, x, qt, impl="ref",
+                              out_dtype=jnp.float32)
+        t_int, pal = _time_us(quant_matmul, x, qt, impl="pallas",
+                              interpret=True, block_m=32, block_n=64,
+                              block_k=256, out_dtype=jnp.float32)
         err = float(jnp.abs(ref - pal).max())
         rows.append(dict(
             bench="kernels", kernel="quant_matmul", bits=bits,
-            us_per_call=round(t_ref, 1),
+            us_per_call_ref=round(t_ref, 1),
+            us_per_call_interpret=round(t_int, 1),
             max_err_vs_oracle=err,
+            bytes_moved=qt.nbytes(),
             hbm_traffic_ratio=round(qt.nbytes() / bf16_bytes, 4)))
     return rows
+
+
+def run_grouped() -> List[dict]:
+    rng = np.random.default_rng(1)
+    e, m, k, n = 8, 32, 512, 128
+    x = jnp.asarray(rng.standard_normal((e, m, k)), jnp.float32)
+    w = jnp.asarray(rng.standard_normal((e, k, n)), jnp.float32)
+    bf16_bytes = e * k * n * 2                 # one dense bf16 copy
+    legacy_bytes = 2 * bf16_bytes              # old path: hi AND lo dense
+    rows = []
+    for hi_bits, lo_bits in ((4, 2), (8, 4), (4, 0)):
+        mp = MixedPrecisionWeights.build(w, hi_bits, lo_bits or None, 64)
+        per_hi = mp.high.nbytes() // e
+        per_lo = (mp.low.nbytes() // e) if mp.low is not None else 0
+        for crit_frac in (1.0, 0.5, 0.0):
+            n_hi = int(round(e * crit_frac))
+            mask = jnp.arange(e) < n_hi
+            t_ref, ref = _time_us(expert_quant_matmul, x, mp, mask,
+                                  impl="ref", out_dtype=jnp.float32)
+            t_int, pal = _time_us(expert_quant_matmul, x, mp, mask,
+                                  impl="pallas", interpret=True, block_m=32,
+                                  block_n=64, block_k=256,
+                                  out_dtype=jnp.float32)
+            err = float(jnp.abs(ref - pal).max())
+            moved = n_hi * per_hi + (e - n_hi) * per_lo
+            rows.append(dict(
+                bench="kernels", kernel="expert_quant_matmul",
+                hi_bits=hi_bits, lo_bits=lo_bits, crit_frac=crit_frac,
+                us_per_call_ref=round(t_ref, 1),
+                us_per_call_interpret=round(t_int, 1),
+                max_err_vs_oracle=err,
+                bytes_moved=moved,
+                hbm_traffic_ratio=round(moved / bf16_bytes, 4),
+                legacy_dense_ratio=round(legacy_bytes / bf16_bytes, 4)))
+    return rows
+
+
+def run() -> List[dict]:
+    return run_dense() + run_grouped()
 
 
 if __name__ == "__main__":

@@ -19,13 +19,13 @@ def main():
     print(f"{args.arch}: {cfg.num_experts} experts, "
           f"top-{cfg.num_experts_per_tok}, {cfg.num_layers} layers\n")
     print(f"{'system':20s} {'vram':>5s} {'TTFT':>9s} {'TPOT':>9s} "
-          f"{'hit rate':>8s}")
+          f"{'hit rate':>8s} {'MB/tok':>9s}")
     for vram in (12, 16, 24):
         for system in ("accelerate", "mixtral-offloading", "moe-infinity",
                        "dymoe-4/2", "dymoe-4/0"):
-            ttft, tpot, stats = _run_system(system, cfg, vram)
+            ttft, tpot, stats, wb_tok = _run_system(system, cfg, vram)
             print(f"{system:20s} {vram:4d}G {ttft:8.3f}s {tpot:8.4f}s "
-                  f"{stats.hit_rate:8.2%}")
+                  f"{stats.hit_rate:8.2%} {wb_tok / 2**20:9.1f}")
         print()
 
 

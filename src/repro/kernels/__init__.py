@@ -2,6 +2,9 @@
 
 * ``quant_matmul`` — fused unpack+dequant+matmul for int8/int4/int2 packed
   expert weights (the paper's quantized expert FFN).
+* ``expert_quant_matmul`` — grouped per-expert variant: one kernel runs
+  every expert's matmul straight from the packed buffer its runtime
+  critical mask selects (high-bit / low-bit / "0-bit" skip).
 * ``attn_scores`` — flash attention that additionally accumulates per-key
   attention mass, the heavy-hitter token score of DyMoE Eq. (1), which a
   standard flash kernel never materializes.
@@ -10,7 +13,8 @@ Each kernel directory has ``<name>.py`` (pallas_call + BlockSpec),
 ``ops.py`` (jit'd public wrapper with jnp fallback) and ``ref.py``
 (pure-jnp oracle used by tests).
 """
-from repro.kernels.quant_matmul.ops import quant_matmul
+from repro.kernels.quant_matmul.ops import quant_matmul, expert_quant_matmul
 from repro.kernels.attn_scores.ops import flash_attention_with_scores
 
-__all__ = ["quant_matmul", "flash_attention_with_scores"]
+__all__ = ["quant_matmul", "expert_quant_matmul",
+           "flash_attention_with_scores"]

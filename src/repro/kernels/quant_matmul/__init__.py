@@ -1,3 +1,3 @@
-from repro.kernels.quant_matmul.ops import quant_matmul
+from repro.kernels.quant_matmul.ops import quant_matmul, expert_quant_matmul
 
-__all__ = ["quant_matmul"]
+__all__ = ["quant_matmul", "expert_quant_matmul"]

@@ -1,0 +1,204 @@
+"""Grouped per-expert fused dequant-matmul Pallas kernel.
+
+Computes ``y[e] = x[e] @ dequant(W_e^(b_e))`` for a *batch of experts* whose
+per-expert bit width is selected at runtime by a ``(E,)`` critical mask:
+Critical experts run from the high-bit packed buffer, Sub-critical ones from
+the low-bit buffer — or, in the "4/0" deployment (``lo_packed is None``),
+their output block is zeroed without the packed codes ever being unpacked.
+
+TPU mapping
+-----------
+* Grid ``(E, M/bm, N/bn, K/bk)`` — E/M/N parallel, K ``arbitrary`` (serial
+  accumulation into a VMEM scratch accumulator).
+* The critical mask rides in as a **scalar-prefetch** operand
+  (:class:`pltpu.PrefetchScalarGridSpec`), so it is resident in SMEM before
+  the grid starts and the *index maps themselves* depend on it: the packed
+  buffer an expert does NOT use has its index map pinned to block
+  ``(0, 0, 0)``, which the pipeline fetches once and then never re-fetches
+  (consecutive identical block indices elide the DMA). Per expert, only the
+  selected precision's bytes move over the HBM→VMEM hop — this is DyMoE's
+  I/O-volume argument executed directly from the packed representation,
+  with no dense ``(E, K, N)`` bf16 intermediate anywhere.
+* Inside the body a ``lax.cond`` on the prefetched scalar unpacks exactly
+  one of the two tiles (shift/mask on the VPU, per-group scale, MXU matmul
+  with f32 accumulation).
+* Non-divisible M/N/K are handled by zero-padding in the wrapper: padded
+  scale groups are zero, so padded K contributes exactly nothing.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels.quant_matmul.quant_matmul import _unpack_dequant
+
+__all__ = ["expert_quant_matmul_pallas"]
+
+
+def _dual_kernel(crit_ref, x_ref, hp_ref, hs_ref, lp_ref, ls_ref, o_ref,
+                 acc_ref, *, hi_bits, lo_bits, group_size, nk):
+    e = pl.program_id(0)
+    kk = pl.program_id(3)
+    crit = crit_ref[e] > 0
+
+    @pl.when(kk == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    w = jax.lax.cond(
+        crit,
+        lambda: _unpack_dequant(hp_ref[0], hs_ref[0], hi_bits, group_size),
+        lambda: _unpack_dequant(lp_ref[0], ls_ref[0], lo_bits, group_size))
+    x = x_ref[0].astype(jnp.float32)
+    acc_ref[...] += jnp.dot(x, w, preferred_element_type=jnp.float32)
+
+    @pl.when(kk == nk - 1)
+    def _done():
+        o_ref[0] = acc_ref[...].astype(o_ref.dtype)
+
+
+def _skip_kernel(crit_ref, x_ref, hp_ref, hs_ref, o_ref, acc_ref, *,
+                 hi_bits, group_size, nk):
+    e = pl.program_id(0)
+    kk = pl.program_id(3)
+    crit = crit_ref[e] > 0
+
+    @pl.when(kk == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    @pl.when(crit)  # skipped experts: output stays zero, codes stay packed
+    def _compute():
+        w = _unpack_dequant(hp_ref[0], hs_ref[0], hi_bits, group_size)
+        x = x_ref[0].astype(jnp.float32)
+        acc_ref[...] += jnp.dot(x, w, preferred_element_type=jnp.float32)
+
+    @pl.when(kk == nk - 1)
+    def _done():
+        o_ref[0] = acc_ref[...].astype(o_ref.dtype)
+
+
+def _pad_to(x: jnp.ndarray, axis: int, mult: int) -> jnp.ndarray:
+    pad = (-x.shape[axis]) % mult
+    if pad == 0:
+        return x
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("hi_bits", "lo_bits", "group_size", "block_m",
+                     "block_n", "block_k", "interpret", "out_dtype"),
+)
+def expert_quant_matmul_pallas(
+        x: jnp.ndarray, hi_packed: jnp.ndarray, hi_scales: jnp.ndarray,
+        lo_packed: Optional[jnp.ndarray], lo_scales: Optional[jnp.ndarray],
+        critical: jnp.ndarray, *, hi_bits: int, lo_bits: int,
+        group_size: int, block_m: int = 128, block_n: int = 128,
+        block_k: int = 512, interpret: bool = False,
+        out_dtype=jnp.bfloat16) -> jnp.ndarray:
+    """y[e] = x[e] @ W_e at per-expert precision, from packed weights.
+
+    Args:
+      x: (E, M, K) activations (the expert capacity buffer).
+      hi_packed: (E, N, K / vpb_hi) uint8; hi_scales: (E, K / gs, N) f32.
+      lo_packed/lo_scales: low-bit twin, or both None for the "4/0" skip.
+      critical: (E,) bool/int — True selects the high-bit buffer.
+    Returns:
+      (E, M, N) in ``out_dtype``; skipped experts' blocks are zero.
+    """
+    e, m, k = x.shape
+    n = hi_packed.shape[1]
+    vpb_hi = 8 // hi_bits
+    assert hi_packed.shape == (e, n, k // vpb_hi), (hi_packed.shape, e, n, k)
+    assert hi_scales.shape == (e, k // group_size, n)
+    has_lo = lo_packed is not None
+    if has_lo:
+        vpb_lo = 8 // lo_bits
+        assert lo_packed.shape == (e, n, k // vpb_lo)
+        assert lo_scales.shape == (e, k // group_size, n)
+
+    bm, bn, bk = min(block_m, m), min(block_n, n), min(block_k, k)
+    bk = max(group_size, (bk // group_size) * group_size)
+    assert k % group_size == 0, (k, group_size)
+
+    # zero-pad to block multiples; padded scale groups are zero => padded K
+    # dequantizes to exactly 0 and padded M/N rows/cols are sliced off.
+    xp = _pad_to(_pad_to(x, 1, bm), 2, bk)
+    hp = _pad_to(_pad_to(hi_packed, 1, bn), 2, bk // vpb_hi)
+    hs = _pad_to(_pad_to(hi_scales, 1, bk // group_size), 2, bn)
+    if has_lo:
+        lp = _pad_to(_pad_to(lo_packed, 1, bn), 2, bk // vpb_lo)
+        ls = _pad_to(_pad_to(lo_scales, 1, bk // group_size), 2, bn)
+    mp_, kp_ = xp.shape[1], xp.shape[2]
+    np_ = hp.shape[1]
+    nk = kp_ // bk
+    grid = (e, mp_ // bm, np_ // bn, nk)
+
+    crit = jnp.asarray(critical).astype(jnp.int32)
+
+    def x_map(ei, i, j, kk, c):
+        return (ei, i, kk)
+
+    def hi_map(ei, i, j, kk, c):
+        # non-critical experts never read their hi tile: pin it to block
+        # (0,0,0) so consecutive grid steps elide the DMA entirely.
+        use = c[ei] > 0
+        return (jnp.where(use, ei, 0), jnp.where(use, j, 0),
+                jnp.where(use, kk, 0))
+
+    def hi_s_map(ei, i, j, kk, c):
+        use = c[ei] > 0
+        return (jnp.where(use, ei, 0), jnp.where(use, kk, 0),
+                jnp.where(use, j, 0))
+
+    def lo_map(ei, i, j, kk, c):
+        use = c[ei] == 0
+        return (jnp.where(use, ei, 0), jnp.where(use, j, 0),
+                jnp.where(use, kk, 0))
+
+    def lo_s_map(ei, i, j, kk, c):
+        use = c[ei] == 0
+        return (jnp.where(use, ei, 0), jnp.where(use, kk, 0),
+                jnp.where(use, j, 0))
+
+    in_specs = [
+        pl.BlockSpec((1, bm, bk), x_map),
+        pl.BlockSpec((1, bn, bk // vpb_hi), hi_map),
+        pl.BlockSpec((1, bk // group_size, bn), hi_s_map),
+    ]
+    operands = [xp, hp, hs]
+    if has_lo:
+        in_specs += [
+            pl.BlockSpec((1, bn, bk // vpb_lo), lo_map),
+            pl.BlockSpec((1, bk // group_size, bn), lo_s_map),
+        ]
+        operands += [lp, ls]
+        kernel = functools.partial(_dual_kernel, hi_bits=hi_bits,
+                                   lo_bits=lo_bits, group_size=group_size,
+                                   nk=nk)
+    else:
+        kernel = functools.partial(_skip_kernel, hi_bits=hi_bits,
+                                   group_size=group_size, nk=nk)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=grid,
+        in_specs=in_specs,
+        out_specs=pl.BlockSpec((1, bm, bn), lambda ei, i, j, kk, c: (ei, i, j)),
+        scratch_shapes=[pltpu.VMEM((bm, bn), jnp.float32)],
+    )
+    out = pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((e, mp_, np_), out_dtype),
+        interpret=interpret,
+    )(crit, *operands)
+    return out[:, :m, :n]

@@ -1,10 +1,15 @@
-"""Public jit'd wrapper for the fused dequant-matmul.
+"""Public jit'd wrappers for the fused dequant-matmul kernels.
 
 ``quant_matmul`` accepts a :class:`repro.quant.QuantizedTensor` (or raw
 packed/scales arrays) and dispatches to the Pallas kernel on TPU (or in
 interpret mode when requested) with a pure-jnp fallback — the fallback is
 the default on CPU so the whole framework runs everywhere, while the kernel
 is exercised by the kernel test-suite in interpret mode and targets TPU.
+
+``expert_quant_matmul`` is the grouped per-expert twin: it takes a
+:class:`repro.quant.MixedPrecisionWeights` whose leaves carry a leading
+expert dim plus a ``(E,)`` critical mask, and executes every expert's
+matmul straight from the packed codes of the precision the mask selects.
 """
 from __future__ import annotations
 
@@ -13,11 +18,14 @@ from typing import Optional
 import jax
 import jax.numpy as jnp
 
+from repro.kernels.quant_matmul.expert_quant_matmul import \
+    expert_quant_matmul_pallas
 from repro.kernels.quant_matmul.quant_matmul import quant_matmul_pallas
-from repro.kernels.quant_matmul.ref import quant_matmul_ref
-from repro.quant.qtensor import QuantizedTensor
+from repro.kernels.quant_matmul.ref import expert_quant_matmul_ref, \
+    quant_matmul_ref
+from repro.quant.qtensor import MixedPrecisionWeights, QuantizedTensor
 
-__all__ = ["quant_matmul"]
+__all__ = ["quant_matmul", "expert_quant_matmul"]
 
 
 def _on_tpu() -> bool:
@@ -51,3 +59,49 @@ def quant_matmul(x: jnp.ndarray, qt: QuantizedTensor, *,
     else:
         raise ValueError(f"unknown impl {impl!r}")
     return y.reshape(*lead, -1)
+
+
+def expert_quant_matmul(x: jnp.ndarray, weights: MixedPrecisionWeights,
+                        critical: jnp.ndarray, *,
+                        impl: Optional[str] = None, interpret: bool = False,
+                        block_m: int = 128, block_n: int = 128,
+                        block_k: int = 512,
+                        out_dtype=jnp.bfloat16) -> jnp.ndarray:
+    """``y[e] = x[e] @ W_e`` at the per-expert precision ``critical`` picks.
+
+    Args:
+      x: (E, M, K) per-expert activation blocks.
+      weights: expert-batched mixed-precision store — ``high.packed`` is
+        (E, N, K/vpb); ``low`` may be None ("4/0"), in which case
+        sub-critical experts' outputs are zero.
+      critical: (E,) bool — True => high-bit path.
+      impl: "pallas" | "ref" | None (auto: pallas on TPU, ref elsewhere).
+    Returns:
+      (E, M, N) in ``out_dtype``.
+    """
+    if impl is None:
+        impl = "pallas" if _on_tpu() else "ref"
+    hi, lo = weights.high, weights.low
+    lo_bits = lo.bits if lo is not None else 0
+    if lo is not None:
+        assert lo.group_size == hi.group_size, (lo.group_size, hi.group_size)
+    e = hi.packed.shape[0]
+    critical = jnp.asarray(critical)
+    assert critical.shape == (e,), \
+        f"critical mask shape {critical.shape} != ({e},) experts"
+    if impl == "pallas":
+        return expert_quant_matmul_pallas(
+            x, hi.packed, hi.scales,
+            lo.packed if lo is not None else None,
+            lo.scales if lo is not None else None,
+            critical, hi_bits=hi.bits, lo_bits=lo_bits,
+            group_size=hi.group_size, block_m=block_m, block_n=block_n,
+            block_k=block_k, interpret=interpret, out_dtype=out_dtype)
+    if impl == "ref":
+        return expert_quant_matmul_ref(
+            x, hi.packed, hi.scales,
+            lo.packed if lo is not None else None,
+            lo.scales if lo is not None else None,
+            critical, hi_bits=hi.bits, lo_bits=lo_bits,
+            group_size=hi.group_size, out_dtype=out_dtype)
+    raise ValueError(f"unknown impl {impl!r}")

@@ -1,11 +1,21 @@
-"""Pure-jnp oracle for the quant_matmul kernel."""
+"""Pure-jnp oracles for the quant_matmul kernels.
+
+``expert_quant_matmul_ref`` streams ONE expert block at a time through a
+``lax.map`` and picks the high- or low-bit representation with a
+``lax.cond`` per expert, so — like the Pallas kernel and unlike the old
+dequantize-everything-and-where path — it never materializes a dense
+``(E, K, N)`` bf16/f32 weight tensor.
+"""
 from __future__ import annotations
 
+from typing import Optional
+
+import jax
 import jax.numpy as jnp
 
 from repro.quant.quantize import dequantize_tensor
 
-__all__ = ["quant_matmul_ref"]
+__all__ = ["quant_matmul_ref", "expert_quant_matmul_ref"]
 
 
 def quant_matmul_ref(x: jnp.ndarray, packed: jnp.ndarray, scales: jnp.ndarray,
@@ -15,3 +25,43 @@ def quant_matmul_ref(x: jnp.ndarray, packed: jnp.ndarray, scales: jnp.ndarray,
     w = dequantize_tensor(packed, scales, bits, group_size, jnp.float32)
     return jnp.dot(x.astype(jnp.float32), w,
                    preferred_element_type=jnp.float32).astype(out_dtype)
+
+
+def expert_quant_matmul_ref(
+        x: jnp.ndarray, hi_packed: jnp.ndarray, hi_scales: jnp.ndarray,
+        lo_packed: Optional[jnp.ndarray], lo_scales: Optional[jnp.ndarray],
+        critical: jnp.ndarray, *, hi_bits: int, lo_bits: int,
+        group_size: int, out_dtype=jnp.bfloat16) -> jnp.ndarray:
+    """y[e] = x[e] @ W_e at per-expert precision. Shapes as in the kernel:
+    x (E, M, K); *_packed (E, N, K/vpb); *_scales (E, K/gs, N);
+    critical (E,). ``lo_packed is None`` zeroes sub-critical experts."""
+    crit = jnp.asarray(critical).astype(jnp.int32)
+    m, n = x.shape[1], hi_packed.shape[1]
+
+    def one_hi(xe, hp, hs):
+        w = dequantize_tensor(hp, hs, hi_bits, group_size, jnp.float32)
+        return jnp.dot(xe.astype(jnp.float32), w,
+                       preferred_element_type=jnp.float32)
+
+    if lo_packed is None:
+        def one(args):
+            xe, hp, hs, ce = args
+            return jax.lax.cond(
+                ce > 0,
+                lambda: one_hi(xe, hp, hs),
+                lambda: jnp.zeros((m, n), jnp.float32))
+        y = jax.lax.map(one, (x, hi_packed, hi_scales, crit))
+    else:
+        def one(args):
+            xe, hp, hs, lp, ls, ce = args
+
+            def lo():
+                w = dequantize_tensor(lp, ls, lo_bits, group_size,
+                                      jnp.float32)
+                return jnp.dot(xe.astype(jnp.float32), w,
+                               preferred_element_type=jnp.float32)
+
+            return jax.lax.cond(ce > 0, lambda: one_hi(xe, hp, hs), lo)
+        y = jax.lax.map(one, (x, hi_packed, hi_scales, lo_packed, lo_scales,
+                              crit))
+    return y.astype(out_dtype)

@@ -11,6 +11,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.models.config import ModelConfig
+from repro.quant.mixed import mixed_precision_matmul
 from repro.quant.qtensor import MixedPrecisionWeights
 
 __all__ = ["init_mlp", "mlp", "quantize_mlp", "mlp_quantized"]
@@ -51,17 +52,15 @@ def mlp_quantized(qp, cfg: ModelConfig, x: jnp.ndarray,
                   critical: jnp.ndarray) -> jnp.ndarray:
     """FFN from quantized weights; ``critical`` is a scalar bool (depth-aware
     layer tier). High precision when critical, low (or identity-skip for
-    "x/0") otherwise.
+    "x/0": the FFN output zeroes and the residual passes the layer through)
+    otherwise — every matmul runs straight from the packed buffer.
     """
-    def pick(mp: MixedPrecisionWeights):
-        hi = mp.high.dequantize(x.dtype)
-        if mp.low is None:
-            return jnp.where(critical, 1.0, 0.0).astype(x.dtype) * hi
-        lo = mp.low.dequantize(x.dtype)
-        return jnp.where(critical, hi, lo)
+    def mm(name, h):
+        return mixed_precision_matmul(h, qp[name], critical,
+                                      skip_to_zero=True, out_dtype=x.dtype)
 
     if cfg.mlp_type == "swiglu":
-        h = jax.nn.silu(x @ pick(qp["w_gate"])) * (x @ pick(qp["w_up"]))
+        h = jax.nn.silu(mm("w_gate", x)) * mm("w_up", x)
     else:
-        h = jax.nn.gelu(x @ pick(qp["w_up"]))
-    return h @ pick(qp["w_down"])
+        h = jax.nn.gelu(mm("w_up", x))
+    return mm("w_down", h)

@@ -10,7 +10,11 @@ vmapped expert FFNs, and gathered back weighted by their gates.
 DyMoE integration (paper §4):
   * ``critical_mask`` (E,) selects per-expert precision at runtime —
     high-bit for Critical experts, low-bit or skip ("0-bit") for
-    Sub-critical ones (paper §4.3/§5).
+    Sub-critical ones (paper §4.3/§5). The quantized expert FFN executes
+    through the grouped ``expert_quant_matmul`` kernel straight from the
+    packed codes of the selected precision — no dense (E, dm, dff)
+    dequantized weight is ever materialized, so the bytes each layer moves
+    scale with the selected bit width (the paper's I/O-volume argument).
   * The returned :class:`MoEStats` carries the per-expert token load,
     heavy-hitter token load (Eq. 2) and mean gate score (Eq. 3) consumed by
     the importance estimator, plus router logits for the look-ahead
@@ -27,6 +31,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.models.config import ModelConfig
+from repro.quant.mixed import mixed_precision_matmul
 from repro.quant.qtensor import MixedPrecisionWeights
 
 __all__ = ["init_moe", "moe_apply", "moe_apply_sharded", "quantize_moe",
@@ -96,15 +101,18 @@ def _expert_ffn(w_gate, w_up, w_down, xb: jnp.ndarray) -> jnp.ndarray:
     return jnp.einsum("ecf,efd->ecd", h, w_down)
 
 
-def _select_weights(qw: dict, name: str, critical: jnp.ndarray, dtype):
-    """Per-expert precision selection. critical: (E,) bool."""
-    mp: MixedPrecisionWeights = qw[name]
-    hi = mp.high.dequantize(dtype)                      # (E, a, b)
-    cmask = critical.reshape(-1, 1, 1)
-    if mp.low is None:  # "4/0": sub-critical experts are skipped outright
-        return jnp.where(cmask, hi, jnp.zeros_like(hi))
-    lo = mp.low.dequantize(dtype)
-    return jnp.where(cmask, hi, lo)
+def _expert_ffn_quantized(qw: dict, critical: jnp.ndarray, xb: jnp.ndarray
+                          ) -> jnp.ndarray:
+    """xb: (E, C, dm) -> (E, C, dm), every matmul executed straight from the
+    packed buffer ``critical`` selects (grouped expert quant-matmul) — no
+    dense (E, dm, dff) dequantized weight is ever materialized. In the
+    "4/0" deployment sub-critical experts' outputs are zeroed inside the
+    kernel, so a skipped expert contributes exactly nothing."""
+    def mm(name, h):
+        return mixed_precision_matmul(h, qw[name], critical,
+                                      skip_to_zero=True, out_dtype=xb.dtype)
+    h = jax.nn.silu(mm("w_gate", xb)) * mm("w_up", xb)
+    return mm("w_down", h)
 
 
 def moe_apply(p, cfg: ModelConfig, x: jnp.ndarray, *,
@@ -146,12 +154,9 @@ def moe_apply(p, cfg: ModelConfig, x: jnp.ndarray, *,
 
     if critical_mask is not None:
         assert qweights is not None
-        wg = _select_weights(qweights, "w_gate", critical_mask, x.dtype)
-        wu = _select_weights(qweights, "w_up", critical_mask, x.dtype)
-        wd = _select_weights(qweights, "w_down", critical_mask, x.dtype)
+        yb = _expert_ffn_quantized(qweights, critical_mask, buf)  # (E, C, dm)
     else:
-        wg, wu, wd = p["w_gate"], p["w_up"], p["w_down"]
-    yb = _expert_ffn(wg, wu, wd, buf)                    # (E, C, dm)
+        yb = _expert_ffn(p["w_gate"], p["w_up"], p["w_down"], buf)
 
     ye = yb[flat_e, slot]                                # (T*k, dm)
     ye = jnp.where(keep[:, None], ye, 0) * gates.reshape(-1, 1).astype(x.dtype)

@@ -20,6 +20,7 @@ import jax.numpy as jnp
 from repro.models.config import ModelConfig
 from repro.models.kv_cache import SSMCache
 from repro.models.layers.norms import init_rmsnorm, rmsnorm
+from repro.quant.mixed import mixed_precision_matmul
 
 __all__ = [
     "init_mamba",
@@ -107,6 +108,19 @@ def init_ssm_cache(cfg: ModelConfig, batch: int, dtype=jnp.float32
 # ---------------------------------------------------------------- helpers
 
 
+def _proj(x: jnp.ndarray, w) -> jnp.ndarray:
+    """``x @ w`` where ``w`` is either a dense array or a
+    ``(MixedPrecisionWeights, critical)`` pair installed by the DyMoE path
+    in model.py — the latter runs straight from the packed codes of the
+    tier-selected precision (``skip_to_zero=False``: "x/0" on a projection
+    would ablate the whole block, so low=None keeps high)."""
+    if isinstance(w, tuple):
+        mp, critical = w
+        return mixed_precision_matmul(x, mp, critical, skip_to_zero=False,
+                                      out_dtype=x.dtype)
+    return x @ w
+
+
 def _causal_conv(x: jnp.ndarray, w: jnp.ndarray, b: jnp.ndarray
                  ) -> jnp.ndarray:
     """x: (B, T, C); w: (C, conv) depthwise causal conv."""
@@ -161,7 +175,7 @@ def mamba1_prefill(p, cfg: ModelConfig, x: jnp.ndarray, cache: SSMCache
                    ) -> Tuple[jnp.ndarray, SSMCache]:
     bsz, t, _ = x.shape
     di = cfg.d_inner
-    xz = x @ p["in_proj"]
+    xz = _proj(x, p["in_proj"])
     xin, z = jnp.split(xz, 2, axis=-1)
     xc = jax.nn.silu(_causal_conv(xin, p["conv_w"], p["conv_b"]))
     dt, a, bmat, cmat = _mamba1_abc(p, cfg, xc)
@@ -171,7 +185,7 @@ def mamba1_prefill(p, cfg: ModelConfig, x: jnp.ndarray, cache: SSMCache
     h = _assoc_scan(decay, contrib, cache.ssm_state)        # (B,T,di,N)
     y = jnp.einsum("btdn,btn->btd", h, cmat) + p["d_skip"] * xf
     y = (y * jax.nn.silu(z.astype(jnp.float32))).astype(x.dtype)
-    out = y @ p["out_proj"]
+    out = _proj(y, p["out_proj"])
     new_cache = SSMCache(
         conv_state=jnp.pad(xin, ((0, 0), (cfg.ssm_conv - 1, 0), (0, 0))
                            )[:, t:t + cfg.ssm_conv - 1, :].transpose(0, 2, 1),
@@ -184,7 +198,7 @@ def mamba1_prefill(p, cfg: ModelConfig, x: jnp.ndarray, cache: SSMCache
 def mamba1_decode(p, cfg: ModelConfig, x1: jnp.ndarray, cache: SSMCache
                   ) -> Tuple[jnp.ndarray, SSMCache]:
     """x1: (B, 1, dm)."""
-    xz = x1[:, 0] @ p["in_proj"]
+    xz = _proj(x1[:, 0], p["in_proj"])
     xin, z = jnp.split(xz, 2, axis=-1)                      # (B, di)
     xc, conv_state = _conv_step(xin, cache.conv_state, p["conv_w"],
                                 p["conv_b"])
@@ -197,7 +211,7 @@ def mamba1_decode(p, cfg: ModelConfig, x1: jnp.ndarray, cache: SSMCache
     h = decay * cache.ssm_state + contrib
     y = jnp.einsum("bdn,bn->bd", h, cmat) + p["d_skip"] * xf
     y = (y * jax.nn.silu(z.astype(jnp.float32))).astype(x1.dtype)
-    out = (y @ p["out_proj"])[:, None]
+    out = _proj(y, p["out_proj"])[:, None]
     return out, SSMCache(conv_state=conv_state, ssm_state=h,
                          length=cache.length + 1)
 
@@ -217,7 +231,7 @@ def mamba2_prefill(p, cfg: ModelConfig, x: jnp.ndarray, cache: SSMCache
     bsz, t, _ = x.shape
     di, n = cfg.d_inner, cfg.ssm_state
     hh, pd = cfg.ssm_heads, cfg.ssm_head_dim
-    proj = x @ p["in_proj"]
+    proj = _proj(x, p["in_proj"])
     z, xin, bmat, cmat, dt_low = _mamba2_split(p, cfg, proj)
     conv_in = jnp.concatenate([xin, bmat, cmat], axis=-1)   # (B,T,di+2n)
     conv_out = jax.nn.silu(_causal_conv(conv_in, p["conv_w"], p["conv_b"]))
@@ -236,7 +250,7 @@ def mamba2_prefill(p, cfg: ModelConfig, x: jnp.ndarray, cache: SSMCache
     y = rmsnorm(p["gate_norm"],
                 (y * jax.nn.silu(z.astype(jnp.float32))).astype(x.dtype),
                 cfg.norm_eps)
-    out = y @ p["out_proj"]
+    out = _proj(y, p["out_proj"])
     new_cache = SSMCache(
         conv_state=jnp.pad(conv_in, ((0, 0), (cfg.ssm_conv - 1, 0), (0, 0))
                            )[:, t:t + cfg.ssm_conv - 1, :].transpose(0, 2, 1),
@@ -251,7 +265,7 @@ def mamba2_decode(p, cfg: ModelConfig, x1: jnp.ndarray, cache: SSMCache
     bsz = x1.shape[0]
     di, n = cfg.d_inner, cfg.ssm_state
     hh, pd = cfg.ssm_heads, cfg.ssm_head_dim
-    proj = x1[:, 0] @ p["in_proj"]
+    proj = _proj(x1[:, 0], p["in_proj"])
     z, xin, bmat, cmat, dt_low = _mamba2_split(p, cfg, proj)
     conv_in = jnp.concatenate([xin, bmat, cmat], axis=-1)   # (B, di+2n)
     conv_out, conv_state = _conv_step(conv_in, cache.conv_state,
@@ -269,7 +283,7 @@ def mamba2_decode(p, cfg: ModelConfig, x1: jnp.ndarray, cache: SSMCache
     y = rmsnorm(p["gate_norm"],
                 (y * jax.nn.silu(z.astype(jnp.float32))).astype(x1.dtype),
                 cfg.norm_eps)
-    out = (y @ p["out_proj"])[:, None]
+    out = _proj(y, p["out_proj"])[:, None]
     return out, SSMCache(conv_state=conv_state, ssm_state=h,
                          length=cache.length + 1)
 

@@ -217,14 +217,12 @@ def _n_sites(cfg: ModelConfig) -> int:
         if cfg.shared_attn_every else 0
 
 
-def _pick_mixed(mp: MixedPrecisionWeights, critical, dtype):
-    """Per-layer precision pick for dense/SSM weights (traced flag)."""
-    hi = mp.high.dequantize(dtype)
-    if mp.low is None:  # "x/0" on a dense weight would ablate the layer —
-        return hi       # conservative: keep high
-    lo = mp.low.dequantize(dtype)
-    c = jnp.asarray(critical)
-    return jnp.where(c, hi, lo)
+def _q_ssm(sp: dict, qs: dict, tier) -> dict:
+    """Swap the SSM projections for ``(MixedPrecisionWeights, tier)`` pairs:
+    ssm.py's ``_proj`` executes them straight from the packed codes of the
+    tier-selected precision (no dense dequantized weight materialized)."""
+    return dict(sp, in_proj=(qs["in_proj"], tier),
+                out_proj=(qs["out_proj"], tier))
 
 
 @jax.tree_util.register_dataclass
@@ -456,11 +454,7 @@ def prefill(params, cfg: ModelConfig, tokens: Optional[jnp.ndarray] = None,
             h = rmsnorm(lp["norm1"], x, cfg.norm_eps)
             sp = lp["ssm"]
             if dymoe_on:
-                qs = xs_l["q"]["ssm"]
-                sp = dict(sp,
-                          in_proj=_pick_mixed(qs["in_proj"], xs_l["tier"], dt),
-                          out_proj=_pick_mixed(qs["out_proj"], xs_l["tier"],
-                                               dt))
+                sp = _q_ssm(sp, xs_l["q"]["ssm"], xs_l["tier"])
             y, cache = mamba_prefill(sp, cfg, h, init_ssm_cache(cfg, b, dt))
             x = x + y
 
@@ -611,11 +605,7 @@ def decode_step(params, cfg: ModelConfig, tokens: jnp.ndarray,
             h = rmsnorm(lp["norm1"], x, cfg.norm_eps)
             sp = lp["ssm"]
             if dymoe_on:
-                qs = xs_l["q"]["ssm"]
-                sp = dict(sp,
-                          in_proj=_pick_mixed(qs["in_proj"], xs_l["tier"], dt),
-                          out_proj=_pick_mixed(qs["out_proj"], xs_l["tier"],
-                                               dt))
+                sp = _q_ssm(sp, xs_l["q"]["ssm"], xs_l["tier"])
             y, cache = mamba_decode(sp, cfg, h, cache)
             x = x + y
 

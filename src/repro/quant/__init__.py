@@ -13,8 +13,11 @@ from repro.quant.quantize import (
     gptq_lite_quantize,
 )
 from repro.quant.qtensor import QuantizedTensor, MixedPrecisionWeights
+from repro.quant.mixed import mixed_precision_matmul, select_mixed_weights
 
 __all__ = [
+    "mixed_precision_matmul",
+    "select_mixed_weights",
     "pack_bits",
     "unpack_bits",
     "packed_dim",

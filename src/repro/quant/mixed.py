@@ -1,0 +1,100 @@
+"""The single entry point for every mixed-precision matmul in the model.
+
+Before this module existed, three call sites (MoE experts, the quantized
+dense MLP, and the SSM projections) each copy-pasted the same
+dequantize-both-variants-and-``jnp.where`` logic — materializing dense bf16
+weights for BOTH precisions on every call, ~2x the bytes of an unquantized
+baseline. :func:`mixed_precision_matmul` replaces all of them: it carries
+the packed low-bit representation all the way into the GEMM via the grouped
+``expert_quant_matmul`` kernel (Pallas on TPU, streaming jnp elsewhere), so
+the bytes a layer moves scale with the *selected* bit width.
+
+``materialize=True`` keeps the old dequantize-and-select semantics as an
+escape hatch for tests and oracles (:func:`select_mixed_weights` is that
+materializing select on its own).
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax.numpy as jnp
+
+from repro.quant.qtensor import MixedPrecisionWeights
+
+__all__ = ["mixed_precision_matmul", "select_mixed_weights"]
+
+
+def select_mixed_weights(mp: MixedPrecisionWeights, critical, dtype,
+                         *, skip_to_zero: bool = True) -> jnp.ndarray:
+    """Materializing per-expert precision select (tests/oracles only).
+
+    critical: (E,) bool for expert-batched weights, scalar for dense ones.
+    ``skip_to_zero`` controls the ``low is None`` ("x/0") policy: True
+    zeroes sub-critical experts (MoE semantics — a zero expert contributes
+    nothing), False keeps high (dense semantics — skipping would ablate the
+    whole layer).
+    """
+    hi = mp.high.dequantize(dtype)
+    c = jnp.asarray(critical)
+    cmask = c.reshape(c.shape + (1,) * (hi.ndim - c.ndim))
+    if mp.low is None:
+        if not skip_to_zero:
+            return hi
+        return jnp.where(cmask, hi, jnp.zeros_like(hi))
+    lo = mp.low.dequantize(dtype)
+    return jnp.where(cmask, hi, lo)
+
+
+def mixed_precision_matmul(x: jnp.ndarray, mp: MixedPrecisionWeights,
+                           critical, *, skip_to_zero: bool = True,
+                           materialize: bool = False,
+                           impl: Optional[str] = None,
+                           interpret: bool = False,
+                           out_dtype=None) -> jnp.ndarray:
+    """``y = x @ W`` at the precision ``critical`` selects, from packed codes.
+
+    Two weight layouts, matching the two kinds of call site:
+      * expert-batched — ``mp.high.packed`` is (E, N, K/vpb), ``x`` is
+        (E, M, K), ``critical`` is (E,): the MoE expert FFN.
+      * dense — ``mp.high.packed`` is (N, K/vpb), ``x`` is (..., K),
+        ``critical`` is a scalar: quantized MLP / SSM projections (treated
+        as a 1-expert group).
+
+    ``skip_to_zero`` / ``materialize``: see :func:`select_mixed_weights`.
+    """
+    from repro.kernels.quant_matmul.ops import expert_quant_matmul
+
+    if out_dtype is None:
+        out_dtype = x.dtype
+    batched = mp.high.packed.ndim == 3
+    if materialize:
+        w = select_mixed_weights(mp, critical, x.dtype,
+                                 skip_to_zero=skip_to_zero)
+        eq = "emk,ekn->emn" if batched else "...k,kn->...n"
+        return jnp.einsum(eq, x, w).astype(out_dtype)
+
+    if mp.low is None and not skip_to_zero:
+        # "x/0" on a dense weight would ablate the layer — run high always.
+        critical = jnp.ones((1,), jnp.int32) if not batched else \
+            jnp.ones((mp.high.packed.shape[0],), jnp.int32)
+
+    if batched:
+        return expert_quant_matmul(x, mp, critical, impl=impl,
+                                   interpret=interpret, out_dtype=out_dtype)
+    lead = x.shape[:-1]
+    k = x.shape[-1]
+    x3 = x.reshape(1, -1, k)
+    crit = jnp.asarray(critical).reshape(1)
+    mp1 = MixedPrecisionWeights(
+        high=_lift(mp.high),
+        low=_lift(mp.low) if mp.low is not None else None)
+    y = expert_quant_matmul(x3, mp1, crit, impl=impl, interpret=interpret,
+                            out_dtype=out_dtype)
+    return y.reshape(*lead, -1)
+
+
+def _lift(qt):
+    """Add a leading 1-expert dim to a dense QuantizedTensor."""
+    import dataclasses
+    return dataclasses.replace(qt, packed=qt.packed[None],
+                               scales=qt.scales[None])

@@ -32,7 +32,10 @@ class EdgeProfile:
 
 def expert_bytes(cfg: ModelConfig, bits: int) -> int:
     """Per-expert blob size (3 SwiGLU matrices) at a bit-width, including
-    group scales."""
+    group scales. Since the grouped ``expert_quant_matmul`` kernel feeds the
+    MXU straight from the packed codes, this is also exactly what one
+    expert's matmuls move over the memory system — not a 2x-bf16
+    dequantized copy."""
     dm, dff, gs = cfg.d_model, cfg.expert_d_ff, cfg.dymoe.group_size
     weights = 3 * dm * dff * bits // 8
     scales = (2 * (dm // gs) * dff + (dff // gs) * dm) * 4
@@ -63,6 +66,21 @@ class EdgeCostModel:
         return 2 * mult * s_q * self.cfg.d_model * self.cfg.d_ff
 
     # ------------------------------------------------------------- API
+    def moe_weight_bytes(self, n_hi: int, n_lo: int,
+                         include_shared: bool = True) -> int:
+        """Packed weight bytes one MoE layer's grouped quant-matmul actually
+        reads for ``n_hi`` Critical + ``n_lo`` Sub-critical active experts
+        (skipped experts in a "x/0" deployment move zero bytes — pass them
+        in neither count)."""
+        cfg = self.cfg
+        hb = expert_bytes(cfg, cfg.dymoe.high_bits)
+        lb = expert_bytes(cfg, cfg.dymoe.low_bits) if cfg.dymoe.low_bits \
+            else 0
+        b = n_hi * hb + n_lo * lb
+        if include_shared:
+            b += cfg.num_shared_experts * expert_bytes(cfg, 16)
+        return b
+
     def layer_compute_s(self, *, phase: str, s_ctx: int, s_q: int,
                         active_experts_hi: int = 0,
                         active_experts_lo: int = 0,
@@ -88,11 +106,8 @@ class EdgeCostModel:
             flops += tokens_routed * k * per_tok
             if cfg.num_shared_experts:
                 flops += s_q * cfg.num_shared_experts * per_tok
-            hb = expert_bytes(cfg, cfg.dymoe.high_bits)
-            lb = expert_bytes(cfg, max(cfg.dymoe.low_bits, 1)) \
-                if cfg.dymoe.low_bits else 0
-            rbytes += active_experts_hi * hb + active_experts_lo * lb
-            rbytes += cfg.num_shared_experts * expert_bytes(cfg, 16)
+            rbytes += self.moe_weight_bytes(active_experts_hi,
+                                            active_experts_lo)
         elif cfg.d_ff:
             flops += self._dense_ffn_flops(s_q)
             mult = 3 if cfg.mlp_type == "swiglu" else 2

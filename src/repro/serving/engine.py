@@ -18,7 +18,7 @@ from __future__ import annotations
 import dataclasses
 import time
 from functools import partial
-from typing import Dict, List, Optional, Sequence
+from typing import Dict, List, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -58,6 +58,10 @@ class GenerationResult:
     prefill_timing: Optional[StepTiming] = None
     decode_timings: Optional[List[StepTiming]] = None
     cache_stats: Optional[Dict] = None
+    # packed expert-weight bytes the grouped quant-matmul read (what the
+    # HLO actually moves now that execution runs from packed buffers):
+    prefill_weight_bytes: Optional[int] = None
+    decode_weight_bytes_per_tok: Optional[float] = None
 
 
 class DyMoEEngine:
@@ -100,27 +104,37 @@ class DyMoEEngine:
 
     def _timing(self, info, *, phase: str, s_ctx: int, s_q: int,
                 orch: Optional[DynamicExpertOrchestrator]
-                ) -> Optional[StepTiming]:
-        """Replay one step's telemetry through the orchestrator."""
+                ) -> Tuple[Optional[StepTiming], int]:
+        """Replay one step's telemetry through the orchestrator.
+
+        Returns (timing, weight_bytes): ``weight_bytes`` is the packed
+        expert-weight traffic of the step — per layer, each active Critical
+        expert moves its high-bit blob, each active Sub-critical one its
+        low-bit blob (zero in the "x/0" skip deployment). This mirrors what
+        the grouped quant-matmul kernel reads, byte for byte.
+        """
         cfg = self.cfg
         if orch is None or info.critical_masks is None:
-            return None
+            return None, 0
         crit = np.asarray(info.critical_masks)
         active = np.asarray(info.active_masks)
         pred = np.asarray(info.predicted_next)
         compute = []
+        wbytes = 0
         for l in range(crit.shape[0]):
             n_active = int(active[l].sum())
             n_hi = int((active[l] & crit[l]).sum())
             n_lo = n_active - n_hi
             if cfg.dymoe.low_bits == 0:
                 n_lo = 0
+            wbytes += self.cost.moe_weight_bytes(n_hi, n_lo)
             compute.append(self.cost.layer_compute_s(
                 phase=phase, s_ctx=s_ctx, s_q=s_q,
                 active_experts_hi=n_hi, active_experts_lo=n_lo,
                 tokens_routed=s_q))
-        return orch.step(list(crit.astype(bool)), list(active.astype(bool)),
-                         list(pred), compute)
+        timing = orch.step(list(crit.astype(bool)),
+                           list(active.astype(bool)), list(pred), compute)
+        return timing, wbytes
 
     # -------------------------------------------------------------- API
     def generate(self, request: Request, rng_key=None) -> GenerationResult:
@@ -135,8 +149,8 @@ class DyMoEEngine:
         logits, caches, info = self._prefill(
             self.params, tokens=prompt, qparams=self.qparams,
             cache_slots=slots)
-        pre_t = self._timing(info, phase="prefill", s_ctx=s, s_q=s,
-                             orch=orch)
+        pre_t, pre_wbytes = self._timing(info, phase="prefill", s_ctx=s,
+                                         s_q=s, orch=orch)
         ttft = pre_t.total_s if pre_t is not None else \
             sum(self.cost.layer_compute_s(phase="prefill", s_ctx=s, s_q=s,
                                           tokens_routed=s)
@@ -148,6 +162,7 @@ class DyMoEEngine:
                            top_k=request.top_k)
         tokens.append(int(tok[0]))
         tpot_total = 0.0
+        dec_wbytes = 0
         for i in range(request.max_new_tokens - 1):
             if rng_key is not None:
                 rng_key, sub = jax.random.split(rng_key)
@@ -157,8 +172,9 @@ class DyMoEEngine:
                 self.params, tokens=tok, caches=caches,
                 qparams=self.qparams)
             s_ctx = s + i + 1
-            dt = self._timing(dinfo, phase="decode", s_ctx=s_ctx, s_q=1,
-                              orch=orch)
+            dt, step_wbytes = self._timing(dinfo, phase="decode",
+                                           s_ctx=s_ctx, s_q=1, orch=orch)
+            dec_wbytes += step_wbytes
             if dt is not None:
                 decode_timings.append(dt)
                 tpot_total += dt.total_s
@@ -177,7 +193,10 @@ class DyMoEEngine:
             wall_s=wall,
             prefill_timing=pre_t, decode_timings=decode_timings or None,
             cache_stats=(dataclasses.asdict(orch.cache.stats)
-                         if orch else None))
+                         if orch else None),
+            prefill_weight_bytes=(pre_wbytes if pre_t is not None else None),
+            decode_weight_bytes_per_tok=(
+                dec_wbytes / n_dec if decode_timings else None))
 
     def generate_batch(self, requests: Sequence[Request], rng_key=None
                        ) -> List[GenerationResult]:

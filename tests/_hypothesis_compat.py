@@ -1,0 +1,88 @@
+"""Deterministic fallback shims for the slice of the hypothesis API this
+suite uses, so the property tests still collect and run in offline
+containers where hypothesis is not installed.
+
+``given`` draws ``max_examples`` examples per test from per-example
+``random.Random`` instances seeded by a stable CRC of the test name — no
+shrinking, no database, but fully deterministic across runs. The real
+hypothesis is preferred whenever importable (see the try/except at each
+test module's import site).
+"""
+from __future__ import annotations
+
+import functools
+import inspect
+import random
+import zlib
+
+__all__ = ["given", "settings", "strategies"]
+
+_DEFAULT_MAX_EXAMPLES = 25
+
+
+class _Strategy:
+    def __init__(self, draw):
+        self._draw = draw
+
+    def example(self, rand: random.Random):
+        return self._draw(rand)
+
+
+class strategies:  # noqa: N801 — mimics the `hypothesis.strategies` module
+    @staticmethod
+    def integers(min_value, max_value):
+        return _Strategy(lambda r: r.randint(min_value, max_value))
+
+    @staticmethod
+    def floats(min_value, max_value):
+        return _Strategy(lambda r: r.uniform(min_value, max_value))
+
+    @staticmethod
+    def booleans():
+        return _Strategy(lambda r: r.random() < 0.5)
+
+    @staticmethod
+    def sampled_from(elements):
+        elements = list(elements)
+        return _Strategy(lambda r: elements[r.randrange(len(elements))])
+
+    @staticmethod
+    def tuples(*strats):
+        return _Strategy(lambda r: tuple(s.example(r) for s in strats))
+
+    @staticmethod
+    def lists(elements, min_size=0, max_size=10):
+        return _Strategy(
+            lambda r: [elements.example(r)
+                       for _ in range(r.randint(min_size, max_size))])
+
+
+def settings(max_examples: int = _DEFAULT_MAX_EXAMPLES, deadline=None,
+             **_ignored):
+    """Records max_examples on the function; works whether it wraps the raw
+    test or the ``given`` wrapper (decorator order varies)."""
+    def deco(fn):
+        fn._hyp_max_examples = max_examples
+        return fn
+    return deco
+
+
+def given(**strats):
+    def deco(fn):
+        @functools.wraps(fn)
+        def wrapper(*args, **kwargs):
+            n = getattr(wrapper, "_hyp_max_examples",
+                        getattr(fn, "_hyp_max_examples",
+                                _DEFAULT_MAX_EXAMPLES))
+            seed0 = zlib.crc32(fn.__qualname__.encode())
+            for i in range(n):
+                rand = random.Random(seed0 + i)
+                drawn = {name: s.example(rand) for name, s in strats.items()}
+                fn(*args, **drawn, **kwargs)
+        # hide the drawn parameters from pytest's fixture resolution
+        sig = inspect.signature(fn)
+        wrapper.__signature__ = sig.replace(parameters=[
+            p for name, p in sig.parameters.items() if name not in strats])
+        del wrapper.__wrapped__
+        return wrapper
+    return deco

@@ -1,6 +1,9 @@
 """Mixed-precision LRU cache: the paper's three rules (§4.4.2) + invariants."""
 import pytest
-from hypothesis import given, settings, strategies as st
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # offline container: deterministic shims
+    from _hypothesis_compat import given, settings, strategies as st
 
 from repro.core.cache import MixedPrecisionLRUCache
 

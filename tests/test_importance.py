@@ -1,7 +1,10 @@
 """Phase-adaptive importance estimation (paper Eq. 1-3) + critical select."""
 import jax.numpy as jnp
 import numpy as np
-from hypothesis import given, settings, strategies as st
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # offline container: deterministic shims
+    from _hypothesis_compat import given, settings, strategies as st
 
 from repro.core.importance import (
     decode_expert_importance,
