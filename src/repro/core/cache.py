@@ -135,6 +135,21 @@ class MixedPrecisionLRUCache:
         self.stats.bytes_loaded += size
         return entry, size
 
+    def get_many(self, keys, precisions, nbytes) -> int:
+        """Bulk ``get``: request several experts in one call, in order.
+
+        ``keys`` / ``precisions`` / ``nbytes`` are parallel sequences; the
+        entries are served front to back, so LRU touch order, promotions and
+        evictions are exactly those of the equivalent ``get`` loop (the
+        vectorized orchestrator replay relies on this). Returns the total
+        bytes missed (the demand transfer sitting on the critical path).
+        """
+        missed = 0
+        get = self.get
+        for key, prec, nb in zip(keys, precisions, nbytes):
+            missed += get(key, prec, nbytes=nb)[1]
+        return missed
+
     def prefetch(self, key: Key, precision: str, *,
                  nbytes: Optional[int] = None) -> int:
         """Admit an expert ahead of use. Returns bytes transferred (0 if the

@@ -100,6 +100,28 @@ class DynamicExpertOrchestrator:
         return (self.cfg.bytes_high if precision == "high"
                 else self.cfg.bytes_low)
 
+    def _layer_requests(self, critical_mask: np.ndarray, active: np.ndarray):
+        """Vectorized precision assignment for one layer.
+
+        numpy set-ops over the (E,) masks replace the per-expert Python
+        branch of :meth:`_required_precisions`: returns ``(ids, is_high,
+        n_skip)`` where ``ids`` are the served expert ids in ascending
+        order (the same order the scalar walk visits them, so LRU touch /
+        eviction order is preserved) and ``is_high`` flags each id's
+        requested precision.
+        """
+        cfg = self.cfg
+        act = np.asarray(active, bool)
+        if not cfg.enable_dyquant:
+            ids = np.flatnonzero(act)
+            return ids, np.ones(ids.size, bool), 0
+        crit = np.asarray(critical_mask, bool)
+        if cfg.low_is_skip:
+            ids = np.flatnonzero(act & crit)
+            return ids, np.ones(ids.size, bool), int((act & ~crit).sum())
+        ids = np.flatnonzero(act)
+        return ids, crit[ids], 0
+
     def _required_precisions(self, critical_mask: np.ndarray,
                              active: np.ndarray):
         """Map (critical, active) per expert -> precision request or skip."""
@@ -178,6 +200,71 @@ class DynamicExpertOrchestrator:
                 prefetch_bytes=pf_bytes,
                 num_high=n_hi, num_low=n_lo, num_skipped=n_skip))
         return StepTiming(timings)
+
+    def step_batch(self, critical_masks, active_masks, predicted_next,
+                   compute_s) -> List[StepTiming]:
+        """Vectorized replay of a chunk of decode steps (or one prefill).
+
+        Same semantics as calling :meth:`step` once per leading index —
+        the scalar ``step`` stays as the oracle and the equivalence is
+        tested — but the per-expert precision *branching* is replaced by
+        numpy set-ops (:meth:`_layer_requests`) and the cache is driven
+        through its bulk ``get_many`` entry point. The LRU admission walk
+        inside ``get_many`` is still per-expert (an LRU with byte-budget
+        eviction is inherently sequential); what this removes is the
+        per-expert Python branching, per-call cost-model work, and
+        per-step dispatch overhead around it.
+
+        critical_masks / active_masks: (T, L, E) bool; predicted_next:
+        (T, L, E) float or None (disables prefetch); compute_s: (T, L)
+        modeled compute windows. Returns one StepTiming per step.
+        """
+        cfg = self.cfg
+        crit = np.asarray(critical_masks, bool)
+        active = np.asarray(active_masks, bool)
+        assert crit.ndim == 3 and active.shape == crit.shape, (
+            crit.shape, np.shape(active))
+        pred = (None if predicted_next is None
+                else np.asarray(predicted_next, float))
+        compute = np.asarray(compute_s, float)
+        bh, bl = cfg.bytes_high, cfg.bytes_low
+        out: List[StepTiming] = []
+        for t in range(crit.shape[0]):
+            timings: List[LayerTiming] = []
+            for l in range(cfg.num_layers):
+                ids, is_hi, n_skip = self._layer_requests(
+                    crit[t, l], active[t, l])
+                n_hi = int(is_hi.sum())
+                n_lo = ids.size - n_hi
+                missed = self.cache.get_many(
+                    [(l, int(e)) for e in ids],
+                    ["high" if h else "low" for h in is_hi],
+                    [bh if h else bl for h in is_hi])
+                c = float(compute[t, l])
+                stall = 0.0
+                if missed:
+                    done = self._now + missed / cfg.pcie_bw
+                    self._dma_tail = max(self._dma_tail, done)
+                    stall = done - self._now
+                self._now += stall
+                compute_start = self._now
+                self._now += c
+                pf_bytes = 0
+                if (cfg.enable_prefetch and pred is not None
+                        and l + 1 < cfg.num_layers):
+                    top = np.argsort(-pred[t, l])[:cfg.prefetch_topk]
+                    for e in top:
+                        pf_bytes += self.cache.prefetch(
+                            (l + 1, int(e)), "high", nbytes=bh)
+                    if pf_bytes:
+                        self._dma_tail = max(self._dma_tail, compute_start) \
+                            + pf_bytes / cfg.pcie_bw
+                timings.append(LayerTiming(
+                    layer=l, stall_s=stall, compute_s=c,
+                    required_bytes_missed=missed, prefetch_bytes=pf_bytes,
+                    num_high=n_hi, num_low=n_lo, num_skipped=n_skip))
+            out.append(StepTiming(timings))
+        return out
 
     def reset_clock(self) -> None:
         self._now = 0.0

@@ -10,6 +10,7 @@ from repro.models.model import (
     train_step_fn,
     prefill,
     decode_step,
+    decode_many,
     init_decode_state,
     DyMoEInfo,
 )
@@ -24,6 +25,7 @@ __all__ = [
     "train_step_fn",
     "prefill",
     "decode_step",
+    "decode_many",
     "init_decode_state",
     "DyMoEInfo",
 ]

@@ -28,6 +28,7 @@ DyMoE integration (inference paths):
 from __future__ import annotations
 
 import dataclasses
+import warnings
 from typing import Any, Dict, Optional, Tuple
 
 import jax
@@ -51,7 +52,7 @@ from repro.quant.qtensor import MixedPrecisionWeights
 
 __all__ = [
     "init_params", "quantize_model", "forward", "loss_fn", "train_step_fn",
-    "prefill", "decode_step", "init_decode_state", "DyMoEInfo",
+    "prefill", "decode_step", "decode_many", "init_decode_state", "DyMoEInfo",
 ]
 
 
@@ -631,3 +632,60 @@ def decode_step(params, cfg: ModelConfig, tokens: jnp.ndarray,
         info.gate_mean = ys["gate_mean"]
         info.predicted_next = ys["pred"].at[-1].set(0.0)
     return logits, new_caches, info
+
+
+def decode_many(params, cfg: ModelConfig, tokens: jnp.ndarray, caches: Any,
+                *, num_steps: int, start_step=0,
+                qparams: Optional[dict] = None, rng_key=None,
+                temperature=0.0, top_k: int = 0,
+                ) -> Tuple[jnp.ndarray, Any, DyMoEInfo]:
+    """Fused multi-token decode: ``lax.scan`` over ``num_steps`` decode
+    steps with on-device sampling, so a whole chunk costs ONE dispatch and
+    ONE device→host transfer instead of ``num_steps`` of each.
+
+    tokens: (B,) int32 — the last sampled token per sequence. The scan
+    carries (tokens, caches, PRNG key); sampling happens inside the scan
+    body via :func:`repro.serving.sampler.sample_token`. ``top_k`` is a
+    trace-time static (it shapes ``lax.top_k``); ``temperature`` may be a
+    traced scalar so a jitted wrapper does not recompile per requested
+    temperature — when traced it must be > 0 and ``rng_key`` must be set
+    (the greedy/sampling choice is structural: greedy iff ``rng_key is
+    None`` or a *concrete* temperature is <= 0). Step ``i`` (global
+    index ``start_step + i``; ``start_step`` may be a traced scalar so
+    chunked callers don't retrace per chunk) draws its key as
+    ``jax.random.fold_in(rng_key, start_step + i)`` — a counter-derived
+    stream, so any chunking of the same request (chunk=1 vs chunk=16, or
+    an early EOS exit) samples bit-identical tokens.
+
+    Returns (sampled tokens (num_steps, B) int32, final caches, DyMoEInfo
+    whose per-step telemetry leaves are stacked along a leading
+    ``num_steps`` axis — e.g. critical_masks (num_steps, L, E)).
+
+    ``temperature > 0`` without ``rng_key`` falls back to greedy with a
+    warning (same contract as ``sample_token``).
+    """
+    # local import: serving depends on models, not the reverse
+    from repro.serving.sampler import sample_token
+
+    concrete_t = isinstance(temperature, (int, float))
+    if concrete_t and temperature > 0.0 and rng_key is None:
+        warnings.warn("decode_many: temperature > 0 but no PRNG key was "
+                      "provided; falling back to greedy decoding")
+    greedy = rng_key is None or (concrete_t and temperature <= 0.0)
+    key = rng_key if rng_key is not None else jax.random.PRNGKey(0)
+    steps = jnp.arange(num_steps, dtype=jnp.int32) + start_step
+
+    def body(carry, i):
+        tok, caches, key = carry
+        logits, caches, info = decode_step(params, cfg, tok, caches,
+                                           qparams=qparams)
+        if greedy:
+            nxt = sample_token(logits)
+        else:
+            nxt = sample_token(logits, jax.random.fold_in(key, i),
+                               temperature=temperature, top_k=top_k)
+        return (nxt, caches, key), (nxt, info)
+
+    (_, caches, _), (toks, infos) = jax.lax.scan(
+        body, (tokens, caches, key), steps)
+    return toks, caches, infos

@@ -11,6 +11,8 @@ from __future__ import annotations
 
 import dataclasses
 
+import numpy as np
+
 from repro.models.config import ModelConfig
 
 __all__ = ["EdgeProfile", "EdgeCostModel", "expert_bytes"]
@@ -66,12 +68,13 @@ class EdgeCostModel:
         return 2 * mult * s_q * self.cfg.d_model * self.cfg.d_ff
 
     # ------------------------------------------------------------- API
-    def moe_weight_bytes(self, n_hi: int, n_lo: int,
-                         include_shared: bool = True) -> int:
+    def moe_weight_bytes(self, n_hi, n_lo, include_shared: bool = True):
         """Packed weight bytes one MoE layer's grouped quant-matmul actually
         reads for ``n_hi`` Critical + ``n_lo`` Sub-critical active experts
         (skipped experts in a "x/0" deployment move zero bytes — pass them
-        in neither count)."""
+        in neither count). ``n_hi`` / ``n_lo`` may be numpy arrays (e.g.
+        per-layer or (steps, layers) counts); the result broadcasts, so a
+        whole telemetry block is priced in one call."""
         cfg = self.cfg
         hb = expert_bytes(cfg, cfg.dymoe.high_bits)
         lb = expert_bytes(cfg, cfg.dymoe.low_bits) if cfg.dymoe.low_bits \
@@ -81,44 +84,55 @@ class EdgeCostModel:
             b += cfg.num_shared_experts * expert_bytes(cfg, 16)
         return b
 
-    def layer_compute_s(self, *, phase: str, s_ctx: int, s_q: int,
-                        active_experts_hi: int = 0,
-                        active_experts_lo: int = 0,
-                        tokens_routed: int = 0) -> float:
+    def layer_compute_s(self, *, phase: str, s_ctx, s_q,
+                        active_experts_hi=0,
+                        active_experts_lo=0,
+                        tokens_routed=0):
         """Modeled compute window for one transformer layer.
 
         decode (s_q small) is bandwidth-bound: time = resident bytes read /
         mem_bw; prefill is compute-bound: time = FLOPs / flops. We take the
         max of both terms (roofline).
+
+        Every numeric argument broadcasts: pass scalars for one layer, or
+        numpy arrays — e.g. ``s_ctx`` of shape (T, 1) with expert counts of
+        shape (T, L) — to price a whole chunk of decode telemetry in one
+        vectorized call. Scalar in, scalar out; the arithmetic is identical
+        either way, so the vectorized path is bit-equal to the loop it
+        replaces.
         """
         cfg, p = self.cfg, self.profile
+        # out-of-place accumulation: the terms have different broadcast
+        # shapes (e.g. s_ctx (T, 1) vs expert counts (T, L))
         flops = self._attn_flops(s_ctx, s_q)
         rbytes = 0.0
         if cfg.has_attention:
             # KV cache read + attention weights
-            rbytes += 2 * cfg.num_kv_heads * cfg.head_dim * s_ctx * 2
-            rbytes += (cfg.num_heads + 2 * cfg.num_kv_heads) * cfg.head_dim \
+            rbytes = rbytes + 2 * cfg.num_kv_heads * cfg.head_dim * s_ctx * 2
+            rbytes = rbytes \
+                + (cfg.num_heads + 2 * cfg.num_kv_heads) * cfg.head_dim \
                 * cfg.d_model * 2 + cfg.num_heads * cfg.head_dim \
                 * cfg.d_model * 2
         if cfg.is_moe:
             per_tok = self._expert_flops_per_token()
             k = cfg.num_experts_per_tok
-            flops += tokens_routed * k * per_tok
+            flops = flops + tokens_routed * k * per_tok
             if cfg.num_shared_experts:
-                flops += s_q * cfg.num_shared_experts * per_tok
-            rbytes += self.moe_weight_bytes(active_experts_hi,
-                                            active_experts_lo)
+                flops = flops + s_q * cfg.num_shared_experts * per_tok
+            rbytes = rbytes + self.moe_weight_bytes(active_experts_hi,
+                                                    active_experts_lo)
         elif cfg.d_ff:
-            flops += self._dense_ffn_flops(s_q)
+            flops = flops + self._dense_ffn_flops(s_q)
             mult = 3 if cfg.mlp_type == "swiglu" else 2
-            rbytes += mult * cfg.d_model * cfg.d_ff * 2
+            rbytes = rbytes + mult * cfg.d_model * cfg.d_ff * 2
         if cfg.ssm_version:
             di, n = cfg.d_inner, cfg.ssm_state
-            flops += 2 * s_q * cfg.d_model * 3 * di + 6 * s_q * di * n
-            rbytes += (3 * cfg.d_model * di + di * n) * 2
+            flops = flops + 2 * s_q * cfg.d_model * 3 * di \
+                + 6 * s_q * di * n
+            rbytes = rbytes + (3 * cfg.d_model * di + di * n) * 2
         t_compute = flops / (p.flops * p.mfu)
         t_mem = rbytes / (p.mem_bw * p.mbu)
-        return max(t_compute, t_mem)
+        return np.maximum(t_compute, t_mem)
 
     def nonexpert_overlap_window_s(self, *, s_ctx: int, s_q: int) -> float:
         """Compute time of the non-MoE part of a layer — the window the

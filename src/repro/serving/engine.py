@@ -1,7 +1,7 @@
 """DyMoE serving engine — algorithm/system co-designed inference runtime.
 
 Two coupled halves, mirroring the paper's co-design:
-  * **Math** — jitted prefill / decode steps of the real model (optionally
+  * **Math** — jitted prefill / decode of the real model (optionally
     through the mixed-precision weight store), producing exact logits AND
     DyMoE telemetry (importance, critical masks, active experts, look-ahead
     predictions).
@@ -10,6 +10,21 @@ Two coupled halves, mirroring the paper's co-design:
     to produce TTFT / TPOT accounting under a VRAM budget, exactly as the
     paper's Fig. 10 / Table 3 measurements do on real PCIe hardware.
 
+**Chunked decode architecture.** The decode loop is fused on device:
+:func:`repro.models.model.decode_many` runs ``decode_chunk`` decode steps
+inside one ``lax.scan`` — attention/MoE forward, sampling (counter-derived
+PRNG keys via ``fold_in``, so results are invariant to the chunking) and
+telemetry capture all stay on the accelerator — and the engine performs ONE
+jitted dispatch and ONE device→host transfer per chunk instead of per
+token. The host then replays the whole chunk's stacked ``(chunk, L, E)``
+telemetry through the orchestrator's vectorized ``step_batch`` and the
+broadcast cost model, so the modeled TTFT/TPOT accounting no longer pays
+per-expert Python branching or per-step dispatch on the replay path.
+``EngineConfig.decode_chunk`` is the knob: 1
+recovers the token-at-a-time loop (bit-identical greedy tokens and modeled
+numbers, just slower); ~16 amortizes dispatch away. EOS early-exit happens
+between chunks.
+
 Ablation rows map to :class:`EngineConfig` flags (cache / prefetch /
 dyquant / 4-2 vs 4-0), matching paper Table 3 rows 1–6.
 """
@@ -17,6 +32,7 @@ from __future__ import annotations
 
 import dataclasses
 import time
+import warnings
 from functools import partial
 from typing import Dict, List, Optional, Sequence, Tuple
 
@@ -30,8 +46,7 @@ from repro.core.orchestrator import (
     StepTiming,
 )
 from repro.models import ModelConfig
-from repro.models.model import decode_step, init_decode_state, prefill, \
-    quantize_model
+from repro.models.model import decode_many, prefill, quantize_model
 from repro.serving.cost_model import EdgeCostModel, EdgeProfile, expert_bytes
 from repro.serving.request import Request
 from repro.serving.sampler import sample_token
@@ -47,6 +62,7 @@ class EngineConfig:
     enable_prefetch: bool = True    # rows 2 vs 3
     enable_dyquant: bool = True     # rows 3 vs 4 (False: all-high requests)
     max_cache_fraction: float = 0.6  # fraction of VRAM granted to experts
+    decode_chunk: int = 16          # decode steps fused per device dispatch
 
 
 @dataclasses.dataclass
@@ -55,6 +71,9 @@ class GenerationResult:
     ttft_s: float                   # modeled edge TTFT
     tpot_s: float                   # modeled edge per-token latency
     wall_s: float                   # actual CPU wall time (reference only)
+    # wall time of the decode loop alone (clock starts once the first
+    # token is sampled and on host; excludes prefill + its replay):
+    decode_wall_s: Optional[float] = None
     prefill_timing: Optional[StepTiming] = None
     decode_timings: Optional[List[StepTiming]] = None
     cache_stats: Optional[Dict] = None
@@ -67,6 +86,7 @@ class GenerationResult:
 class DyMoEEngine:
     def __init__(self, cfg: ModelConfig, params, engine_cfg: EngineConfig
                  = EngineConfig()):
+        assert engine_cfg.decode_chunk >= 1, engine_cfg.decode_chunk
         self.cfg = cfg
         self.ecfg = engine_cfg
         self.params = params
@@ -75,7 +95,12 @@ class DyMoEEngine:
         self.cost = EdgeCostModel(cfg, engine_cfg.profile)
         self._prefill = jax.jit(partial(prefill, cfg=cfg),
                                 static_argnames=("cache_slots",))
-        self._decode = jax.jit(partial(decode_step, cfg=cfg))
+        # num_steps sets the scan length and top_k shapes lax.top_k, so
+        # they are static; temperature stays traced — serving mixed
+        # per-request temperatures must not recompile the decode scan
+        self._decode_many = jax.jit(
+            partial(decode_many, cfg=cfg),
+            static_argnames=("num_steps", "top_k"))
         self._orch: Optional[DynamicExpertOrchestrator] = None
 
     # ------------------------------------------------------------ system
@@ -102,95 +127,147 @@ class DyMoEEngine:
         )
         return DynamicExpertOrchestrator(ocfg)
 
-    def _timing(self, info, *, phase: str, s_ctx: int, s_q: int,
-                orch: Optional[DynamicExpertOrchestrator]
-                ) -> Tuple[Optional[StepTiming], int]:
-        """Replay one step's telemetry through the orchestrator.
+    def _expert_counts(self, crit: np.ndarray, active: np.ndarray
+                       ) -> Tuple[np.ndarray, np.ndarray]:
+        """(…, L, E) masks -> (…, L) active hi / lo expert counts."""
+        n_active = active.sum(axis=-1)
+        n_hi = (active & crit).sum(axis=-1)
+        n_lo = n_active - n_hi
+        if self.cfg.dymoe.low_bits == 0:
+            n_lo = np.zeros_like(n_lo)
+        return n_hi, n_lo
 
-        Returns (timing, weight_bytes): ``weight_bytes`` is the packed
-        expert-weight traffic of the step — per layer, each active Critical
-        expert moves its high-bit blob, each active Sub-critical one its
-        low-bit blob (zero in the "x/0" skip deployment). This mirrors what
-        the grouped quant-matmul kernel reads, byte for byte.
+    def _replay(self, crit, active, pred, *, phase: str, s_ctx, s_q: int,
+                orch: Optional[DynamicExpertOrchestrator]
+                ) -> Tuple[List[StepTiming], List[float], int]:
+        """Replay a chunk's host-side telemetry through the orchestrator.
+
+        ``crit`` / ``active`` / ``pred`` are the (T, L, E) stacked masks
+        (T = chunk length; T = 1 for prefill; (L, E) inputs are promoted)
+        — exactly the three DyMoEInfo leaves the replay needs, so callers
+        transfer only these; ``s_ctx`` is the per-step context length,
+        shape (T,). Returns (timings, per-step modeled seconds,
+        weight_bytes) where ``weight_bytes`` is the packed expert-weight
+        traffic of the whole chunk — per layer and step, each active
+        Critical expert moves its high-bit blob, each active Sub-critical
+        one its low-bit blob (zero in the "x/0" skip deployment). This
+        mirrors what the grouped quant-matmul kernel reads, byte for byte.
+
+        The replay math is vectorized: expert counts come from numpy
+        set-ops on the stacked masks, the cost model broadcasts over
+        (T, L), and the orchestrator consumes the block via ``step_batch``.
+        (The LRU admission walk itself remains per-expert by design — see
+        ``step_batch`` — but the per-expert precision branching and all
+        FLOP/byte pricing no longer are.)
         """
         cfg = self.cfg
-        if orch is None or info.critical_masks is None:
-            return None, 0
-        crit = np.asarray(info.critical_masks)
-        active = np.asarray(info.active_masks)
-        pred = np.asarray(info.predicted_next)
-        compute = []
-        wbytes = 0
-        for l in range(crit.shape[0]):
-            n_active = int(active[l].sum())
-            n_hi = int((active[l] & crit[l]).sum())
-            n_lo = n_active - n_hi
-            if cfg.dymoe.low_bits == 0:
-                n_lo = 0
-            wbytes += self.cost.moe_weight_bytes(n_hi, n_lo)
-            compute.append(self.cost.layer_compute_s(
-                phase=phase, s_ctx=s_ctx, s_q=s_q,
-                active_experts_hi=n_hi, active_experts_lo=n_lo,
-                tokens_routed=s_q))
-        timing = orch.step(list(crit.astype(bool)),
-                           list(active.astype(bool)), list(pred), compute)
-        return timing, wbytes
+        s_ctx = np.asarray(s_ctx)
+        T = s_ctx.shape[0]
+        if orch is None or crit is None:
+            per_layer = self.cost.layer_compute_s(
+                phase=phase, s_ctx=s_ctx[:, None], s_q=s_q,
+                tokens_routed=s_q)                        # (T, 1)
+            totals = np.broadcast_to(
+                per_layer, (T, cfg.num_layers)).sum(axis=1)
+            return [], [float(x) for x in totals], 0
+        crit = np.asarray(crit, bool).reshape(T, cfg.num_layers, -1)
+        active = np.asarray(active, bool).reshape(crit.shape)
+        pred = np.asarray(pred).reshape(crit.shape)
+        n_hi, n_lo = self._expert_counts(crit, active)    # (T, L)
+        wbytes = int(self.cost.moe_weight_bytes(n_hi, n_lo).sum())
+        compute = self.cost.layer_compute_s(
+            phase=phase, s_ctx=s_ctx[:, None], s_q=s_q,
+            active_experts_hi=n_hi, active_experts_lo=n_lo,
+            tokens_routed=s_q)                            # (T, L)
+        timings = orch.step_batch(crit, active, pred, compute)
+        return timings, [t.total_s for t in timings], wbytes
 
     # -------------------------------------------------------------- API
+    def _effective_sampling(self, request: Request, rng_key
+                            ) -> Tuple[float, int]:
+        """Greedy fallback: sampling without a PRNG key can't crash the
+        serving loop (see ``sample_token``)."""
+        if request.temperature > 0.0 and rng_key is None:
+            warnings.warn("generate: request.temperature > 0 but "
+                          "rng_key=None; falling back to greedy decoding")
+            return 0.0, 0
+        return request.temperature, request.top_k
+
     def generate(self, request: Request, rng_key=None) -> GenerationResult:
-        """Serve one request (edge scenario: batch = 1)."""
+        """Serve one request (edge scenario: batch = 1), decoding in fused
+        ``decode_chunk``-sized device chunks. Token i's PRNG key is
+        ``fold_in(rng_key, i)``, so outputs are chunking-invariant."""
         cfg = self.cfg
+        temperature, top_k = self._effective_sampling(request, rng_key)
+        sampling = temperature > 0.0
         prompt = jnp.asarray(request.prompt_tokens, jnp.int32)[None, :]
         s = prompt.shape[1]
         slots = cfg.sliding_window or (s + request.max_new_tokens)
         orch = self._make_orchestrator()
+        eos = request.eos_token
         t0 = time.perf_counter()
 
         logits, caches, info = self._prefill(
             self.params, tokens=prompt, qparams=self.qparams,
             cache_slots=slots)
-        pre_t, pre_wbytes = self._timing(info, phase="prefill", s_ctx=s,
-                                         s_q=s, orch=orch)
-        ttft = pre_t.total_s if pre_t is not None else \
-            sum(self.cost.layer_compute_s(phase="prefill", s_ctx=s, s_q=s,
-                                          tokens_routed=s)
-                for _ in range(cfg.num_layers))
+        crit, act, pred = jax.device_get(
+            (info.critical_masks, info.active_masks, info.predicted_next))
+        pre_timings, pre_totals, pre_wbytes = self._replay(
+            crit, act, pred, phase="prefill", s_ctx=np.asarray([s]), s_q=s,
+            orch=orch)
+        pre_t = pre_timings[0] if pre_timings else None
+        ttft = pre_t.total_s if pre_t is not None else pre_totals[0]
 
-        tokens: List[int] = []
+        tok = sample_token(
+            logits, jax.random.fold_in(rng_key, 0) if sampling else None,
+            temperature=temperature, top_k=top_k)
+        tokens: List[int] = [int(tok[0])]   # host sync: prefill complete
+        t_dec = time.perf_counter()
         decode_timings: List[StepTiming] = []
-        tok = sample_token(logits, rng_key, temperature=request.temperature,
-                           top_k=request.top_k)
-        tokens.append(int(tok[0]))
         tpot_total = 0.0
         dec_wbytes = 0
-        for i in range(request.max_new_tokens - 1):
-            if rng_key is not None:
-                rng_key, sub = jax.random.split(rng_key)
-            else:
-                sub = None
-            logits, caches, dinfo = self._decode(
+        done = eos is not None and tokens[0] == eos
+        total_steps = request.max_new_tokens - 1
+        n_done = 0  # decode steps completed (== tokens sampled - 1)
+        while n_done < total_steps and not done:
+            chunk = min(self.ecfg.decode_chunk, total_steps - n_done)
+            toks_d, caches, infos = self._decode_many(
                 self.params, tokens=tok, caches=caches,
-                qparams=self.qparams)
-            s_ctx = s + i + 1
-            dt, step_wbytes = self._timing(dinfo, phase="decode",
-                                           s_ctx=s_ctx, s_q=1, orch=orch)
-            dec_wbytes += step_wbytes
-            if dt is not None:
-                decode_timings.append(dt)
-                tpot_total += dt.total_s
-            else:
-                tpot_total += sum(
-                    self.cost.layer_compute_s(phase="decode", s_ctx=s_ctx,
-                                              s_q=1, tokens_routed=1)
-                    for _ in range(cfg.num_layers))
-            tok = sample_token(logits, sub, temperature=request.temperature,
-                               top_k=request.top_k)
-            tokens.append(int(tok[0]))
-        wall = time.perf_counter() - t0
+                qparams=self.qparams, num_steps=chunk,
+                start_step=n_done + 1,
+                rng_key=rng_key if sampling else None,
+                temperature=temperature, top_k=top_k)
+            tok = toks_d[-1]
+            # the chunk's ONE device->host transfer: tokens + the three
+            # telemetry leaves the replay consumes (nothing else moves)
+            toks_np, crit, act, pred = jax.device_get(
+                (toks_d, infos.critical_masks, infos.active_masks,
+                 infos.predicted_next))
+            new = [int(t) for t in toks_np[:, 0]]
+            keep = chunk
+            if eos is not None and eos in new:
+                keep = new.index(eos) + 1
+                done = True
+            new = new[:keep]
+            if keep < chunk and crit is not None:
+                crit, act, pred = crit[:keep], act[:keep], pred[:keep]
+            s_ctx = s + n_done + 1 + np.arange(keep)
+            timings, totals, wbytes = self._replay(
+                crit, act, pred, phase="decode", s_ctx=s_ctx, s_q=1,
+                orch=orch)
+            decode_timings.extend(timings)
+            for x in totals:   # per-step adds: bit-equal to decode_chunk=1
+                tpot_total += x
+            dec_wbytes += wbytes
+            tokens.extend(new)
+            n_done += keep
+        t_end = time.perf_counter()
+        wall = t_end - t0
         n_dec = max(len(tokens) - 1, 1)
         return GenerationResult(
-            tokens=tokens, ttft_s=ttft, tpot_s=tpot_total / n_dec,
-            wall_s=wall,
+            tokens=tokens, ttft_s=float(ttft),
+            tpot_s=float(tpot_total / n_dec),
+            wall_s=wall, decode_wall_s=t_end - t_dec,
             prefill_timing=pre_t, decode_timings=decode_timings or None,
             cache_stats=(dataclasses.asdict(orch.cache.stats)
                          if orch else None),
@@ -200,28 +277,52 @@ class DyMoEEngine:
 
     def generate_batch(self, requests: Sequence[Request], rng_key=None
                        ) -> List[GenerationResult]:
-        """Batched serving for equal-length prompts (throughput path)."""
+        """Batched greedy serving for equal-length prompts (throughput
+        path), decoding in fused chunks. Each row stops contributing at its
+        own ``max_new_tokens`` / ``eos_token``: decode runs until every row
+        is finished (checked between chunks) and outputs are trimmed
+        per-request."""
         lens = {len(r.prompt_tokens) for r in requests}
         assert len(lens) == 1, "batched path requires equal-length prompts"
         cfg = self.cfg
+        if any(r.temperature > 0.0 for r in requests):
+            warnings.warn("generate_batch decodes greedily; per-request "
+                          "temperature is ignored")
         prompts = jnp.asarray([r.prompt_tokens for r in requests], jnp.int32)
         b, s = prompts.shape
-        max_new = max(r.max_new_tokens for r in requests)
+        limits = [r.max_new_tokens for r in requests]
+        eos = [r.eos_token for r in requests]
+        max_new = max(limits)
         slots = cfg.sliding_window or (s + max_new)
         t0 = time.perf_counter()
         logits, caches, _ = self._prefill(self.params, tokens=prompts,
                                           qparams=self.qparams,
                                           cache_slots=slots)
-        toks = sample_token(logits)
-        out = [[int(t)] for t in toks]
-        for _ in range(max_new - 1):
-            logits, caches, _ = self._decode(self.params, tokens=toks,
-                                             caches=caches,
-                                             qparams=self.qparams)
-            toks = sample_token(logits)
-            for row, t in zip(out, toks):
-                row.append(int(t))
+        tok = sample_token(logits)
+        rows = [[int(t)] for t in np.asarray(tok)]
+
+        def finished(i: int) -> bool:
+            row = rows[i][:limits[i]]
+            return len(row) >= limits[i] or \
+                (eos[i] is not None and eos[i] in row)
+
+        n_done = 1  # tokens sampled per row so far
+        while n_done < max_new and not all(map(finished, range(b))):
+            chunk = min(self.ecfg.decode_chunk, max_new - n_done)
+            toks_d, caches, _ = self._decode_many(
+                self.params, tokens=tok, caches=caches,
+                qparams=self.qparams, num_steps=chunk, start_step=n_done)
+            tok = toks_d[-1]
+            toks_np = np.asarray(toks_d)      # one transfer per chunk
+            for i in range(b):
+                rows[i].extend(int(t) for t in toks_np[:, i])
+            n_done += chunk
         wall = time.perf_counter() - t0
-        return [GenerationResult(tokens=row, ttft_s=float("nan"),
-                                 tpot_s=float("nan"), wall_s=wall)
-                for row in out]
+        out = []
+        for i, row in enumerate(rows):
+            row = row[:limits[i]]
+            if eos[i] is not None and eos[i] in row:
+                row = row[:row.index(eos[i]) + 1]
+            out.append(GenerationResult(tokens=row, ttft_s=float("nan"),
+                                        tpot_s=float("nan"), wall_s=wall))
+        return out

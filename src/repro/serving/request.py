@@ -13,4 +13,5 @@ class Request:
     max_new_tokens: int = 32
     temperature: float = 0.0
     top_k: int = 0
+    eos_token: Optional[int] = None   # stop (inclusive) when sampled
     request_id: Optional[str] = None

@@ -1,21 +1,39 @@
 """Token sampling: greedy / temperature / top-k."""
 from __future__ import annotations
 
+import warnings
+
 import jax
 import jax.numpy as jnp
 
 __all__ = ["sample_token"]
 
 
-def sample_token(logits: jnp.ndarray, key=None, *, temperature: float = 0.0,
+def sample_token(logits: jnp.ndarray, key=None, *, temperature=0.0,
                  top_k: int = 0) -> jnp.ndarray:
-    """logits: (B, V) -> (B,) int32."""
-    if temperature <= 0.0:
+    """logits: (B, V) -> (B,) int32.
+
+    ``temperature <= 0`` is greedy (argmax). ``temperature > 0`` draws from
+    the (optionally top-k truncated) categorical and requires a PRNG
+    ``key``; if the caller asked for sampling but passed ``key=None`` we
+    fall back to greedy with a warning instead of crashing — the engine
+    relies on this contract for requests submitted without an RNG key.
+    jit-safe: the greedy/sampling choice is made at trace time and the
+    warning fires once per trace, not per token. ``temperature`` may be a
+    traced scalar (so engines don't recompile per requested temperature);
+    a traced temperature MUST be > 0 — the greedy branch can only be taken
+    when it is a concrete Python number. ``top_k`` is always trace-time
+    static (it shapes ``lax.top_k``).
+    """
+    if isinstance(temperature, (int, float)) and temperature <= 0.0:
+        return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    if key is None:
+        warnings.warn("sample_token: temperature > 0 but no PRNG key was "
+                      "provided; falling back to greedy decoding")
         return jnp.argmax(logits, axis=-1).astype(jnp.int32)
     logits = logits / temperature
     if top_k:
         vals, _ = jax.lax.top_k(logits, top_k)
         thresh = vals[..., -1:]
         logits = jnp.where(logits >= thresh, logits, -jnp.inf)
-    assert key is not None, "sampling requires a PRNG key"
     return jax.random.categorical(key, logits, axis=-1).astype(jnp.int32)

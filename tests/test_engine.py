@@ -1,6 +1,7 @@
 """Serving engine integration: generation determinism, ablation ordering,
-cache accounting — the system half of the paper."""
+cache accounting, chunked-decode parity — the system half of the paper."""
 import jax
+import numpy as np
 import pytest
 
 from repro.models import init_params
@@ -88,6 +89,117 @@ def test_cost_model_prefill_scales_with_seq(moe_setup):
     t2 = cm.layer_compute_s(phase="prefill", s_ctx=1024, s_q=1024,
                             active_experts_hi=4, tokens_routed=1024)
     assert t2 > t1
+
+
+def test_chunked_decode_matches_per_token(moe_setup):
+    """The acceptance contract: decode_chunk=16 and decode_chunk=1 produce
+    bitwise-identical greedy tokens and identical modeled TTFT / TPOT /
+    cache stats / weight-byte accounting."""
+    cfg, params = moe_setup
+    req = Request(prompt_tokens=list(range(1, 17)), max_new_tokens=12)
+    r1 = DyMoEEngine(cfg, params,
+                     EngineConfig(decode_chunk=1)).generate(req)
+    r16 = DyMoEEngine(cfg, params,
+                      EngineConfig(decode_chunk=16)).generate(req)
+    r5 = DyMoEEngine(cfg, params,
+                     EngineConfig(decode_chunk=5)).generate(req)
+    assert r16.tokens == r1.tokens == r5.tokens
+    assert r16.ttft_s == r1.ttft_s == r5.ttft_s
+    assert r16.tpot_s == r1.tpot_s == r5.tpot_s
+    assert r16.cache_stats == r1.cache_stats == r5.cache_stats
+    assert r16.prefill_weight_bytes == r1.prefill_weight_bytes
+    assert r16.decode_weight_bytes_per_tok == r1.decode_weight_bytes_per_tok
+    assert len(r16.decode_timings) == len(r1.decode_timings) == 11
+
+
+def test_sampling_is_chunk_invariant(moe_setup):
+    """fold_in(key, global token index) keys make sampled outputs
+    independent of the decode chunking."""
+    cfg, params = moe_setup
+    req = Request(prompt_tokens=list(range(1, 17)), max_new_tokens=10,
+                  temperature=0.8, top_k=4)
+    key = jax.random.PRNGKey(42)
+    outs = [DyMoEEngine(cfg, params,
+                        EngineConfig(decode_chunk=c)).generate(
+                            req, rng_key=key).tokens
+            for c in (1, 3, 16)]
+    assert outs[0] == outs[1] == outs[2]
+
+
+def test_eos_early_exit(moe_setup):
+    """Generation stops at eos_token (inclusive) with identical modeled
+    accounting whether the eos lands mid-chunk or on a chunk boundary."""
+    cfg, params = moe_setup
+    base = DyMoEEngine(cfg, params, EngineConfig()).generate(
+        Request(prompt_tokens=list(range(1, 17)), max_new_tokens=12))
+    eos = base.tokens[4]
+    cut = base.tokens.index(eos) + 1
+    req = Request(prompt_tokens=list(range(1, 17)), max_new_tokens=12,
+                  eos_token=eos)
+    r16 = DyMoEEngine(cfg, params,
+                      EngineConfig(decode_chunk=16)).generate(req)
+    r1 = DyMoEEngine(cfg, params,
+                     EngineConfig(decode_chunk=1)).generate(req)
+    assert r16.tokens == base.tokens[:cut]
+    assert r16.tokens[-1] == eos
+    assert r16.tokens == r1.tokens
+    assert r16.tpot_s == r1.tpot_s
+    assert r16.cache_stats == r1.cache_stats
+    assert len(r16.decode_timings) == len(r1.decode_timings) == cut - 1
+
+
+def test_sampler_fallback_without_key(moe_setup):
+    """temperature > 0 with rng_key=None must not crash: the engine warns
+    and decodes greedily (documented sample_token contract)."""
+    cfg, params = moe_setup
+    eng = DyMoEEngine(cfg, params, EngineConfig())
+    greedy = eng.generate(Request(prompt_tokens=list(range(1, 17)),
+                                  max_new_tokens=6))
+    with pytest.warns(UserWarning, match="greedy"):
+        r = eng.generate(Request(prompt_tokens=list(range(1, 17)),
+                                 max_new_tokens=6, temperature=1.0))
+    assert r.tokens == greedy.tokens
+
+
+def test_sample_token_none_key_fallback():
+    from repro.serving import sample_token
+    logits = jax.numpy.asarray(np.random.default_rng(0)
+                               .standard_normal((2, 16)), jax.numpy.float32)
+    with pytest.warns(UserWarning, match="greedy"):
+        out = sample_token(logits, None, temperature=0.7)
+    np.testing.assert_array_equal(np.asarray(out),
+                                  np.asarray(logits.argmax(-1)))
+
+
+def test_batched_path_per_request_limits(moe_setup):
+    """generate_batch honors per-request max_new_tokens and eos_token and
+    trims each row independently."""
+    cfg, params = moe_setup
+    eng = DyMoEEngine(cfg, params, EngineConfig())
+    prompt = list(range(1, 9))
+    base = eng.generate_batch([Request(prompt_tokens=prompt,
+                                       max_new_tokens=8)
+                               for _ in range(2)])
+    eos0 = base[0].tokens[2]
+    cut0 = base[0].tokens.index(eos0) + 1
+    out = eng.generate_batch([
+        Request(prompt_tokens=prompt, max_new_tokens=8, eos_token=eos0),
+        Request(prompt_tokens=prompt, max_new_tokens=3),
+    ])
+    assert out[0].tokens == base[0].tokens[:cut0]
+    assert out[1].tokens == base[1].tokens[:3]
+
+
+def test_batched_path_stops_when_all_rows_finished(moe_setup):
+    """When every row hits its limit/eos early, decode stops between chunks
+    instead of running to max_new_tokens."""
+    cfg, params = moe_setup
+    eng = DyMoEEngine(cfg, params, EngineConfig(decode_chunk=2))
+    prompt = list(range(1, 9))
+    out = eng.generate_batch([Request(prompt_tokens=prompt,
+                                      max_new_tokens=3)
+                              for _ in range(2)])
+    assert all(len(r.tokens) == 3 for r in out)
 
 
 def test_dense_arch_engine_fallback():

@@ -1,6 +1,10 @@
 """Dynamic Expert Orchestration Engine timeline semantics (paper Fig. 1,
-Table 3 ablation ordering)."""
+Table 3 ablation ordering), plus the vectorized ``step_batch`` replay
+against the scalar ``step`` oracle."""
+import dataclasses
+
 import numpy as np
+import pytest
 
 from repro.core.orchestrator import DynamicExpertOrchestrator, \
     OrchestratorConfig
@@ -76,3 +80,45 @@ def test_ablation_ordering_matches_paper_table3():
     cache = run(enable_cache=True, enable_prefetch=False)
     full = run(enable_cache=True, enable_prefetch=True)
     assert lod >= cache >= full
+
+
+@pytest.mark.parametrize("kw", [
+    dict(),
+    dict(low_is_skip=True),
+    dict(enable_dyquant=False),
+    dict(enable_prefetch=False),
+    dict(enable_cache=False),
+    dict(vram_budget_bytes=450),   # tight budget: forces mid-layer evictions
+], ids=["default", "skip-low", "no-dyquant", "no-prefetch", "no-cache",
+        "tight-budget"])
+def test_step_batch_matches_scalar_oracle(kw):
+    """step_batch over randomized (T, L, E) mask sequences must reproduce
+    the scalar step walk exactly: per-layer timings, stall/transfer
+    accounting, AND the LRU cache stats (touch/evict order preserved)."""
+    rng = np.random.default_rng(len(repr(sorted(kw.items()))))
+    a = DynamicExpertOrchestrator(_cfg(**kw))
+    b = DynamicExpertOrchestrator(_cfg(**kw))
+    T, L, E = 12, 4, 8
+    crit = rng.random((T, L, E)) < 0.3
+    active = (rng.random((T, L, E)) < 0.4) | crit
+    pred = rng.random((T, L, E))
+    compute = rng.random((T, L)) * 0.01
+    ref = [a.step(list(crit[t]), list(active[t]), list(pred[t]),
+                  list(compute[t])) for t in range(T)]
+    got = b.step_batch(crit, active, pred, compute)
+    assert len(got) == T
+    for t, (r, g) in enumerate(zip(ref, got)):
+        assert dataclasses.asdict(r) == dataclasses.asdict(g), t
+    assert dataclasses.asdict(a.cache.stats) == \
+        dataclasses.asdict(b.cache.stats)
+
+
+def test_step_batch_none_pred_disables_prefetch():
+    a = DynamicExpertOrchestrator(_cfg())
+    b = DynamicExpertOrchestrator(_cfg())
+    cm, am = _masks()
+    r = a.step(cm, am, None, [0.01] * 4)
+    g = b.step_batch(np.asarray(cm)[None], np.asarray(am)[None], None,
+                     [[0.01] * 4])[0]
+    assert dataclasses.asdict(r) == dataclasses.asdict(g)
+    assert all(l.prefetch_bytes == 0 for l in g.layers)
