@@ -17,6 +17,7 @@ charged to the overlap window instead of the critical path.
 from __future__ import annotations
 
 import dataclasses
+import warnings
 from collections import OrderedDict
 from typing import Callable, Dict, Hashable, Optional, Tuple
 
@@ -43,6 +44,9 @@ class CacheStats:
     bytes_loaded: int = 0
     prefetch_bytes: int = 0
     prefetch_hits: int = 0
+    # loads of blobs larger than the whole cache: streamed through without
+    # ever becoming resident (see ``MixedPrecisionLRUCache.get``)
+    bypass_loads: int = 0
 
     @property
     def hit_rate(self) -> float:
@@ -65,6 +69,7 @@ class MixedPrecisionLRUCache:
         self._entries: "OrderedDict[Key, CacheEntry]" = OrderedDict()
         self._used = 0
         self.stats = CacheStats()
+        self._warned_bypass = False
 
     # ------------------------------------------------------------ helpers
     def __contains__(self, key: Key) -> bool:
@@ -73,6 +78,10 @@ class MixedPrecisionLRUCache:
     def resident_precision(self, key: Key) -> Optional[str]:
         e = self._entries.get(key)
         return e.precision if e else None
+
+    def resident_nbytes(self, key: Key) -> int:
+        e = self._entries.get(key)
+        return e.nbytes if e else 0
 
     @property
     def used_bytes(self) -> int:
@@ -112,55 +121,83 @@ class MixedPrecisionLRUCache:
         return None, nbytes
 
     # ------------------------------------------------------------ API
+    def _bypass(self, key: Key, precision: str, size: int,
+                payload: object) -> CacheEntry:
+        """Oversized blob (bigger than the whole cache budget): stream it
+        through without admitting it. Crashing a serving request on a tiny
+        VRAM budget would turn a capacity-planning problem into an outage;
+        instead the load is charged in full as missed bytes every time
+        (never resident => never a hit), counted in ``stats.bypass_loads``,
+        and flagged once with a warning."""
+        if not self._warned_bypass:
+            warnings.warn(
+                f"expert blob {key} ({size}B) exceeds the entire cache "
+                f"budget ({self.capacity}B); degrading to bypass loads — "
+                "every request for it pays the full transfer")
+            self._warned_bypass = True
+        self.stats.bypass_loads += 1
+        return CacheEntry(key, precision, size, payload)
+
     def get(self, key: Key, precision: str, *,
             nbytes: Optional[int] = None) -> Tuple[CacheEntry, int]:
         """Request an expert at a precision. Returns (entry, bytes_missed) —
         bytes_missed > 0 means the transfer sits on the critical path."""
         assert precision in _RANK
         cur = self._entries.get(key)
+        if cur is not None and _RANK[cur.precision] >= _RANK[precision]:
+            # exact hit, or Conservative Reuse of a higher precision
+            if cur.precision != precision:
+                self.stats.conservative_reuses += 1
+            self.stats.hits += 1
+            self._touch(key)
+            return cur, 0
+        self.stats.misses += 1
+        payload, size = self._load(key, precision, nbytes)
+        self.stats.bytes_loaded += size
+        if size > self.capacity:
+            # unadmittable high blob: stream it through but KEEP any
+            # resident low copy — evicting it would turn every future
+            # low request into a recurring miss for nothing
+            return self._bypass(key, precision, size, payload), size
         if cur is not None:
-            if _RANK[cur.precision] >= _RANK[precision]:
-                # exact hit, or Conservative Reuse of a higher precision
-                if cur.precision != precision:
-                    self.stats.conservative_reuses += 1
-                self.stats.hits += 1
-                self._touch(key)
-                return cur, 0
             # Precision Promotion: treat as miss, evict the Low copy
             self.stats.promotions += 1
             self._remove(key)
-        self.stats.misses += 1
-        payload, size = self._load(key, precision, nbytes)
         entry = self._insert(key, precision, size, payload)
-        self.stats.bytes_loaded += size
         return entry, size
 
-    def get_many(self, keys, precisions, nbytes) -> int:
+    def get_many(self, keys, precisions, nbytes):
         """Bulk ``get``: request several experts in one call, in order.
 
         ``keys`` / ``precisions`` / ``nbytes`` are parallel sequences; the
         entries are served front to back, so LRU touch order, promotions and
         evictions are exactly those of the equivalent ``get`` loop (the
-        vectorized orchestrator replay relies on this). Returns the total
-        bytes missed (the demand transfer sitting on the critical path).
-        """
-        missed = 0
+        vectorized orchestrator replay relies on this). Returns (total
+        bytes missed — the demand transfer sitting on the critical path —,
+        per-key missed bytes, so the caller can tell which required keys
+        were served by an already-resident copy)."""
+        per_key = []
         get = self.get
         for key, prec, nb in zip(keys, precisions, nbytes):
-            missed += get(key, prec, nbytes=nb)[1]
-        return missed
+            per_key.append(get(key, prec, nbytes=nb)[1])
+        return sum(per_key), per_key
 
     def prefetch(self, key: Key, precision: str, *,
                  nbytes: Optional[int] = None) -> int:
         """Admit an expert ahead of use. Returns bytes transferred (0 if the
-        request is already satisfied under the same rules as ``get``)."""
+        request is already satisfied under the same rules as ``get``).
+        A blob larger than the whole budget is not prefetched at all —
+        it could never be admitted, so speculatively moving it would only
+        burn DMA bandwidth (0 returned, nothing charged)."""
         cur = self._entries.get(key)
         if cur is not None and _RANK[cur.precision] >= _RANK[precision]:
             self._touch(key)
             return 0
+        payload, size = self._load(key, precision, nbytes)
+        if size > self.capacity:
+            return 0  # keep any lower-precision copy — better than nothing
         if cur is not None:
             self._remove(key)
-        payload, size = self._load(key, precision, nbytes)
         self._insert(key, precision, size, payload)
         self.stats.prefetch_bytes += size
         return size

@@ -21,6 +21,7 @@ __all__ = [
     "prefill_expert_importance",
     "decode_expert_importance",
     "select_critical",
+    "select_critical_rows",
 ]
 
 
@@ -68,3 +69,12 @@ def select_critical(importance: jnp.ndarray, t_l) -> jnp.ndarray:
     order = jnp.argsort(-importance)          # descending
     rank = jnp.zeros((e,), jnp.int32).at[order].set(jnp.arange(e, dtype=jnp.int32))
     return rank < t_l
+
+
+def select_critical_rows(importance: jnp.ndarray, t_l) -> jnp.ndarray:
+    """Per-row :func:`select_critical`: importance (B, E) -> (B, E) bool,
+    each row ranked independently (the continuous-batching decode selects
+    every request's Critical set from ITS OWN gate scores, so a row's
+    precision — and therefore its tokens — never depends on its batch
+    neighbours)."""
+    return jax.vmap(select_critical, in_axes=(0, None))(importance, t_l)

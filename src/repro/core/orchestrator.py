@@ -12,6 +12,14 @@ an explicit edge cost model (single DMA queue, PCIe-class bandwidth):
   3. compute runs; prefetch requests for layer l+1 overlap with it
      (paper Fig. 1, bottom row).
 
+Prefetch admission is *not* instantaneous: every prefetch records its
+modeled DMA completion time (sequential transfers behind the current
+``_dma_tail``), and a required expert whose prefetch has not finished by
+the time its layer starts charges the residual transfer as Wait-for-Weight
+stall — capped at what a plain demand load of the same bytes would have
+cost, since a demand fetch can always preempt and re-issue the transfer.
+Prefetches for experts that arrive on time count as ``prefetch_hits``.
+
 The engine is exact about the paper's precision semantics: Critical experts
 are requested at ``high``; Sub-critical at ``low`` under "4/2" or skipped
 outright under "4/0" (the 0-bit state — no I/O, no compute).
@@ -94,6 +102,10 @@ class DynamicExpertOrchestrator:
         self.cache = MixedPrecisionLRUCache(capacity)
         self._dma_tail = 0.0
         self._now = 0.0
+        # (layer, expert) -> modeled DMA completion time of an issued
+        # prefetch whose arrival has not yet been observed by a demand
+        # request (the fix for write-only _dma_tail / instant admission)
+        self._pending_prefetch: dict = {}
 
     # ------------------------------------------------------------------
     def _bytes(self, precision: str) -> int:
@@ -139,6 +151,81 @@ class DynamicExpertOrchestrator:
                 out.append((e, "low"))
         return out
 
+    def _consume_pending(self, key, key_missed: int):
+        """Settle a required key's pending-prefetch record at its demand
+        lookup, where hit/miss is known. Returns (arrival_time, nbytes)
+        when the demand HIT the prefetch-admitted copy (whose modeled
+        transfer may still be in flight); None when no prefetch was
+        pending — or the prefetched copy was evicted before use and the
+        demand just reloaded it (``key_missed`` > 0: that transfer is
+        already charged in full as a miss, and the stale arrival must not
+        double-charge it or count as a prefetch hit)."""
+        arrival = self._pending_prefetch.pop(key, None)
+        if arrival is None or key_missed:
+            return None
+        return arrival, self.cache.resident_nbytes(key)
+
+    def _demand_stall(self, pending, missed: int) -> float:
+        """Advance the clock over one layer's Wait-for-Weight phase.
+
+        ``missed`` bytes of demand transfers start at ``_now`` (they
+        preempt any in-flight prefetch). ``pending`` holds the
+        (arrival, nbytes) records of required experts served by a
+        prefetch-admitted copy (:meth:`_consume_pending`): compute
+        additionally waits for the latest still-in-flight arrival, capped
+        at the cost of demand-loading those same bytes (a demand fetch
+        preempts and re-issues at worst); on-time arrivals count as
+        prefetch hits. Returns the stall; ``_now`` is advanced past it."""
+        bw = self.cfg.pcie_bw
+        now = self._now
+        done = now + missed / bw
+        if missed:
+            self._dma_tail = max(self._dma_tail, done)
+        late_arrival, late_bytes = 0.0, 0
+        for arrival, nbytes in pending:
+            if arrival <= done:
+                self.cache.note_prefetch_hit()  # arrived in time: free
+                continue
+            late_arrival = max(late_arrival, arrival)
+            late_bytes += nbytes
+        if late_bytes:
+            done = max(done, min(late_arrival,
+                                 now + (missed + late_bytes) / bw))
+            self._dma_tail = max(self._dma_tail, done)
+        stall = done - now
+        self._now = done
+        return stall
+
+    def _issue_prefetch(self, pred_l: np.ndarray, l: int,
+                        compute_start: float) -> int:
+        """Issue look-ahead prefetches for layer l+1 during layer l's
+        compute window. Transfers queue sequentially behind the DMA tail
+        (never before the compute they overlap with starts); each records
+        its modeled completion time for `_demand_stall` to check. Experts
+        with zero predicted demand are never prefetched — an all-zero
+        prediction must prefetch nothing (argsort alone would fabricate
+        topk phantom prefetches out of ties at 0)."""
+        cfg = self.cfg
+        pred_l = np.asarray(pred_l)
+        top = np.argsort(-pred_l)[:cfg.prefetch_topk]
+        pf_bytes = 0
+        tail = max(self._dma_tail, compute_start)
+        for e in top:
+            if pred_l[e] <= 0:
+                continue
+            key = (l + 1, int(e))
+            # the paper prefetches *critical* experts, i.e. at high
+            # precision (§4.4.1 — "prefetch critical weights")
+            got = self.cache.prefetch(key, "high",
+                                      nbytes=self.cfg.bytes_high)
+            if got:
+                tail += got / cfg.pcie_bw
+                self._pending_prefetch[key] = tail
+            pf_bytes += got
+        if pf_bytes:
+            self._dma_tail = tail
+        return pf_bytes
+
     def step(self, critical_masks: Sequence[np.ndarray],
              active_masks: Sequence[np.ndarray],
              predicted_next: Optional[Sequence[np.ndarray]],
@@ -158,6 +245,7 @@ class DynamicExpertOrchestrator:
                 np.asarray(critical_masks[l]), np.asarray(active_masks[l]))
             missed = 0
             n_hi = n_lo = n_skip = 0
+            per_key = []
             for e, prec in reqs:
                 if prec is None:
                     n_skip += 1
@@ -168,14 +256,19 @@ class DynamicExpertOrchestrator:
                     n_lo += 1
                 _, m = self.cache.get((l, e), prec, nbytes=self._bytes(prec))
                 missed += m
+                per_key.append(((l, e), m))
+            # pending records settle AFTER the whole demand walk (same
+            # order as step_batch's get_many, so the scalar/batch clocks
+            # agree even when one required key evicts another mid-layer)
+            pending = []
+            for key, m in per_key:
+                p = self._consume_pending(key, m)
+                if p is not None:
+                    pending.append(p)
             # demand loads PREEMPT in-flight prefetch: they are serviced
-            # from `now` directly, and compute blocks on them
-            stall = 0.0
-            if missed:
-                done = self._now + missed / cfg.pcie_bw
-                self._dma_tail = max(self._dma_tail, done)
-                stall = done - self._now
-            self._now += stall
+            # from `now` directly, and compute additionally blocks on
+            # prefetched-but-still-in-flight required experts
+            stall = self._demand_stall(pending, missed)
             compute_start = self._now
             self._now += compute_s_per_layer[l]
 
@@ -183,16 +276,8 @@ class DynamicExpertOrchestrator:
             pf_bytes = 0
             if (cfg.enable_prefetch and predicted_next is not None
                     and l + 1 < cfg.num_layers):
-                pred = np.asarray(predicted_next[l])
-                top = np.argsort(-pred)[:cfg.prefetch_topk]
-                for e in top:
-                    # the paper prefetches *critical* experts, i.e. at high
-                    # precision (§4.4.1 — "prefetch critical weights")
-                    pf_bytes += self.cache.prefetch(
-                        (l + 1, int(e)), "high", nbytes=self._bytes("high"))
-                if pf_bytes:
-                    self._dma_tail = max(self._dma_tail, compute_start) \
-                        + pf_bytes / cfg.pcie_bw
+                pf_bytes = self._issue_prefetch(predicted_next[l], l,
+                                                compute_start)
             timings.append(LayerTiming(
                 layer=l, stall_s=stall,
                 compute_s=compute_s_per_layer[l],
@@ -236,29 +321,25 @@ class DynamicExpertOrchestrator:
                     crit[t, l], active[t, l])
                 n_hi = int(is_hi.sum())
                 n_lo = ids.size - n_hi
-                missed = self.cache.get_many(
-                    [(l, int(e)) for e in ids],
+                keys = [(l, int(e)) for e in ids]
+                missed, per_key = self.cache.get_many(
+                    keys,
                     ["high" if h else "low" for h in is_hi],
                     [bh if h else bl for h in is_hi])
+                pending = []
+                for key, m in zip(keys, per_key):
+                    p = self._consume_pending(key, m)
+                    if p is not None:
+                        pending.append(p)
                 c = float(compute[t, l])
-                stall = 0.0
-                if missed:
-                    done = self._now + missed / cfg.pcie_bw
-                    self._dma_tail = max(self._dma_tail, done)
-                    stall = done - self._now
-                self._now += stall
+                stall = self._demand_stall(pending, missed)
                 compute_start = self._now
                 self._now += c
                 pf_bytes = 0
                 if (cfg.enable_prefetch and pred is not None
                         and l + 1 < cfg.num_layers):
-                    top = np.argsort(-pred[t, l])[:cfg.prefetch_topk]
-                    for e in top:
-                        pf_bytes += self.cache.prefetch(
-                            (l + 1, int(e)), "high", nbytes=bh)
-                    if pf_bytes:
-                        self._dma_tail = max(self._dma_tail, compute_start) \
-                            + pf_bytes / cfg.pcie_bw
+                    pf_bytes = self._issue_prefetch(pred[t, l], l,
+                                                    compute_start)
                 timings.append(LayerTiming(
                     layer=l, stall_s=stall, compute_s=c,
                     required_bytes_missed=missed, prefetch_bytes=pf_bytes,
@@ -269,3 +350,4 @@ class DynamicExpertOrchestrator:
     def reset_clock(self) -> None:
         self._now = 0.0
         self._dma_tail = 0.0
+        self._pending_prefetch.clear()

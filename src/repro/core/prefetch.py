@@ -31,20 +31,32 @@ def predict_next_gates(h: jnp.ndarray, next_router_w: jnp.ndarray
 
 
 def prefetch_targets(pred_gates: jnp.ndarray, k: int, t: int,
+                     token_valid: jnp.ndarray = None,
                      ) -> Tuple[jnp.ndarray, jnp.ndarray]:
     """Eq. (7)/(8) unified: per-token predicted top-k activations are counted
     across tokens (prefill, T>1 — token-frequency) and the top-t experts by
     frequency are prefetched. For decode (T=1) this reduces exactly to
     Eq. (8)'s direct top-t of ĝ.
 
+    ``token_valid`` (T,) excludes padding tokens of a ragged batch from
+    both the frequency count and the tie-break mass, so a padded row
+    predicts the same demand as its unpadded equivalent.
+
     Returns (expert_ids (t,), freq (E,)).
     """
     tk, e = pred_gates.shape[-2:]
     _, idx = jax.lax.top_k(pred_gates, k)                    # (T, k)
-    freq = jax.nn.one_hot(idx, e, dtype=jnp.float32).sum(axis=(0, 1))
+    oh = jax.nn.one_hot(idx, e, dtype=jnp.float32)
     # tie-break by predicted mass so decode (all counts ∈ {0,1}) picks the
     # highest-probability experts, matching Eq. (8)
-    freq = freq + pred_gates.mean(axis=0) * 0.5
+    if token_valid is not None:
+        tv = token_valid.astype(jnp.float32)
+        oh = oh * tv[:, None, None]
+        mass = (pred_gates * tv[:, None]).sum(axis=0) \
+            / jnp.maximum(tv.sum(), 1.0)
+    else:
+        mass = pred_gates.mean(axis=0)
+    freq = oh.sum(axis=(0, 1)) + mass * 0.5
     _, top = jax.lax.top_k(freq, min(t, e))
     return top, freq
 

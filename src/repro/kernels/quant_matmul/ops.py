@@ -13,6 +13,7 @@ matmul straight from the packed codes of the precision the mask selects.
 """
 from __future__ import annotations
 
+import functools
 from typing import Optional
 
 import jax
@@ -21,11 +22,12 @@ import jax.numpy as jnp
 from repro.kernels.quant_matmul.expert_quant_matmul import \
     expert_quant_matmul_pallas
 from repro.kernels.quant_matmul.quant_matmul import quant_matmul_pallas
-from repro.kernels.quant_matmul.ref import expert_quant_matmul_ref, \
-    quant_matmul_ref
+from repro.kernels.quant_matmul.ref import expert_quant_matmul_fixed_ref, \
+    expert_quant_matmul_ref, expert_quant_matmul_rows_ref, quant_matmul_ref
 from repro.quant.qtensor import MixedPrecisionWeights, QuantizedTensor
 
-__all__ = ["quant_matmul", "expert_quant_matmul"]
+__all__ = ["quant_matmul", "expert_quant_matmul",
+           "expert_quant_matmul_fixed"]
 
 
 def _on_tpu() -> bool:
@@ -59,6 +61,101 @@ def quant_matmul(x: jnp.ndarray, qt: QuantizedTensor, *,
     else:
         raise ValueError(f"unknown impl {impl!r}")
     return y.reshape(*lead, -1)
+
+
+def expert_quant_matmul_fixed(x: jnp.ndarray, qt: QuantizedTensor, *,
+                              impl: Optional[str] = None,
+                              interpret: bool = False,
+                              out_dtype=jnp.bfloat16) -> jnp.ndarray:
+    """``y[e] = x[e] @ W_e`` with EVERY expert at ``qt``'s one precision —
+    the per-buffer entry point of the dual-buffer per-row MoE dispatch.
+    On TPU this is the grouped Pallas kernel with an all-critical mask
+    (the mask costs nothing in-kernel); on CPU it is the branch-free
+    unrolled streaming oracle."""
+    if impl is None:
+        impl = "pallas" if _on_tpu() else "ref"
+    if impl == "pallas":
+        e = qt.packed.shape[0]
+        return expert_quant_matmul_pallas(
+            x, qt.packed, qt.scales, None, None,
+            jnp.ones((e,), jnp.int32), hi_bits=qt.bits, lo_bits=0,
+            group_size=qt.group_size, block_m=128, block_n=128,
+            block_k=512, interpret=interpret, out_dtype=out_dtype)
+    if impl == "ref":
+        return expert_quant_matmul_fixed_ref(
+            x, qt.packed, qt.scales, bits=qt.bits,
+            group_size=qt.group_size, out_dtype=out_dtype)
+    raise ValueError(f"unknown impl {impl!r}")
+
+
+@functools.lru_cache(maxsize=None)
+def _ref_rows_aware(hi_bits: int, lo_bits: int, group_size: int,
+                    out_dtype_name: str, has_lo: bool):
+    """The ref oracle wrapped in a ``custom_vmap`` whose batch rule routes
+    row-batched calls to :func:`expert_quant_matmul_rows_ref`.
+
+    The continuous-batching decode vmaps the whole per-row decode program
+    over slots, which batches x AND the per-row critical mask over this
+    function while the weight store stays shared. Without the rule, vmap
+    turns the oracle's per-expert ``lax.cond`` into a select that unpacks
+    both precision variants PER ROW — B× redundant dequantization of
+    row-invariant weights (measured ~2-4x slower whole-chunk decode).
+    With it, batched rows share one unpack per expert. Unbatched calls
+    (solo ``generate``) run the unmodified oracle."""
+    from jax.custom_batching import custom_vmap
+
+    kw = dict(hi_bits=hi_bits, lo_bits=lo_bits, group_size=group_size,
+              out_dtype=jnp.dtype(out_dtype_name))
+
+    if has_lo:
+        @custom_vmap
+        def f(x, hp, hs, lp, ls, crit):
+            return expert_quant_matmul_ref(x, hp, hs, lp, ls, crit, **kw)
+
+        @f.def_vmap
+        def _rule(axis_size, in_batched, x, hp, hs, lp, ls, crit):
+            xb, hpb, hsb, lpb, lsb, cb = in_batched
+            if hpb or hsb or lpb or lsb:  # batched weights: just stream
+                def one(args):
+                    return expert_quant_matmul_ref(
+                        args[0], args[1], args[2], args[3], args[4],
+                        args[5], **kw)
+                bc = [a if b else
+                      jnp.broadcast_to(a[None], (axis_size,) + a.shape)
+                      for a, b in zip((x, hp, hs, lp, ls, crit),
+                                      in_batched)]
+                return jax.lax.map(one, tuple(bc)), True
+            if not xb:
+                x = jnp.broadcast_to(x[None], (axis_size,) + x.shape)
+            if not cb:
+                crit = jnp.broadcast_to(crit[None],
+                                        (axis_size,) + crit.shape)
+            return expert_quant_matmul_rows_ref(x, hp, hs, lp, ls, crit,
+                                                **kw), True
+        return f
+
+    @custom_vmap
+    def g(x, hp, hs, crit):
+        return expert_quant_matmul_ref(x, hp, hs, None, None, crit, **kw)
+
+    @g.def_vmap
+    def _rule_nolo(axis_size, in_batched, x, hp, hs, crit):
+        xb, hpb, hsb, cb = in_batched
+        if hpb or hsb:
+            def one(args):
+                return expert_quant_matmul_ref(
+                    args[0], args[1], args[2], None, None, args[3], **kw)
+            bc = [a if b else
+                  jnp.broadcast_to(a[None], (axis_size,) + a.shape)
+                  for a, b in zip((x, hp, hs, crit), in_batched)]
+            return jax.lax.map(one, tuple(bc)), True
+        if not xb:
+            x = jnp.broadcast_to(x[None], (axis_size,) + x.shape)
+        if not cb:
+            crit = jnp.broadcast_to(crit[None], (axis_size,) + crit.shape)
+        return expert_quant_matmul_rows_ref(x, hp, hs, None, None, crit,
+                                            **kw), True
+    return g
 
 
 def expert_quant_matmul(x: jnp.ndarray, weights: MixedPrecisionWeights,
@@ -98,10 +195,10 @@ def expert_quant_matmul(x: jnp.ndarray, weights: MixedPrecisionWeights,
             group_size=hi.group_size, block_m=block_m, block_n=block_n,
             block_k=block_k, interpret=interpret, out_dtype=out_dtype)
     if impl == "ref":
-        return expert_quant_matmul_ref(
-            x, hi.packed, hi.scales,
-            lo.packed if lo is not None else None,
-            lo.scales if lo is not None else None,
-            critical, hi_bits=hi.bits, lo_bits=lo_bits,
-            group_size=hi.group_size, out_dtype=out_dtype)
+        f = _ref_rows_aware(hi.bits, lo_bits, hi.group_size,
+                            jnp.dtype(out_dtype).name, lo is not None)
+        if lo is not None:
+            return f(x, hi.packed, hi.scales, lo.packed, lo.scales,
+                     critical)
+        return f(x, hi.packed, hi.scales, critical)
     raise ValueError(f"unknown impl {impl!r}")

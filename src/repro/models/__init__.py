@@ -11,6 +11,7 @@ from repro.models.model import (
     prefill,
     decode_step,
     decode_many,
+    decode_many_batched,
     init_decode_state,
     DyMoEInfo,
 )
@@ -26,6 +27,7 @@ __all__ = [
     "prefill",
     "decode_step",
     "decode_many",
+    "decode_many_batched",
     "init_decode_state",
     "DyMoEInfo",
 ]

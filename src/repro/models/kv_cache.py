@@ -21,6 +21,11 @@ __all__ = ["KVCache", "SSMCache", "init_kv_cache", "update_kv_cache"]
 class KVCache:
     """k/v: (B, H_kv, S_slots, D). positions: (B, S_slots) absolute position
     held by each slot (-1 = empty). length: (B,) tokens seen so far.
+    offset: (B,) pad slots consumed before the row's content — 0 for the
+    usual left-aligned layout; a right-aligned ragged batch (row i padded
+    on the LEFT with S_max - s_i pads) sets offset = S_max - s_i so a new
+    token at logical position ``length`` lands in slot ``length + offset``
+    while attention masks keep reasoning in logical positions.
     ring: static flag — True means S_slots is a sliding window.
     """
 
@@ -28,6 +33,7 @@ class KVCache:
     v: jnp.ndarray
     positions: jnp.ndarray
     length: jnp.ndarray
+    offset: jnp.ndarray
     ring: bool = dataclasses.field(metadata=dict(static=True), default=False)
 
 
@@ -49,6 +55,7 @@ def init_kv_cache(batch: int, num_kv_heads: int, slots: int, head_dim: int,
         v=jnp.zeros((batch, num_kv_heads, slots, head_dim), dtype),
         positions=jnp.full((batch, slots), -1, jnp.int32),
         length=jnp.zeros((batch,), jnp.int32),
+        offset=jnp.zeros((batch,), jnp.int32),
         ring=ring,
     )
 
@@ -57,27 +64,38 @@ def update_kv_cache(cache: KVCache, k_new: jnp.ndarray, v_new: jnp.ndarray
                     ) -> KVCache:
     """Insert one decode step. k_new/v_new: (B, H_kv, 1, D)."""
     b, _, slots, _ = cache.k.shape
-    pos = cache.length  # (B,) absolute position of the incoming token
-    slot = pos % slots if cache.ring else jnp.minimum(pos, slots - 1)
+    pos = cache.length  # (B,) logical position of the incoming token
+    frontier = pos + cache.offset  # (B,) slot index it occupies
+    slot = frontier % slots if cache.ring \
+        else jnp.minimum(frontier, slots - 1)
     bidx = jnp.arange(b)
     k = cache.k.at[bidx, :, slot].set(k_new[:, :, 0].astype(cache.k.dtype))
     v = cache.v.at[bidx, :, slot].set(v_new[:, :, 0].astype(cache.v.dtype))
     positions = cache.positions.at[bidx, slot].set(pos)
     return KVCache(k=k, v=v, positions=positions, length=cache.length + 1,
-                   ring=cache.ring)
+                   offset=cache.offset, ring=cache.ring)
 
 
 def fill_kv_cache(cache: KVCache, k_seq: jnp.ndarray, v_seq: jnp.ndarray,
-                  lengths: Optional[jnp.ndarray] = None) -> KVCache:
+                  lengths: Optional[jnp.ndarray] = None,
+                  offsets: Optional[jnp.ndarray] = None) -> KVCache:
     """Bulk insert a prefill sequence starting at absolute position 0.
     k_seq/v_seq: (B, H_kv, S, D). For ring caches with S > slots only the
     trailing ``slots`` keys are kept (the sliding window semantics); slot
     layout matches ``update_kv_cache``'s ``pos % slots`` rule so decode can
-    continue seamlessly."""
+    continue seamlessly.
+
+    ``lengths`` (B,): per-row true token counts for ragged batches.
+    ``offsets`` (B,): pad slots BEFORE each row's content (right-aligned
+    layout: row i's tokens occupy slots [offset_i, offset_i + length_i));
+    slots outside that window are marked empty (-1) so attention never
+    reads a pad, and the offset is carried so decode writes land on the
+    per-row frontier."""
     b, h, s, d = k_seq.shape
     slots = cache.k.shape[2]
     if s > slots:
         assert cache.ring, (s, slots)
+        assert offsets is None, "ragged offsets unsupported for ring caches"
         keep = slots
         abs_pos = jnp.arange(s - keep, s, dtype=jnp.int32)       # kept keys
         slot_of = abs_pos % slots
@@ -89,12 +107,16 @@ def fill_kv_cache(cache: KVCache, k_seq: jnp.ndarray, v_seq: jnp.ndarray,
             abs_pos[None, :])
         length = jnp.full((b,), s, jnp.int32)
         return KVCache(k=k, v=v, positions=positions, length=length,
-                       ring=True)
+                       offset=jnp.zeros((b,), jnp.int32), ring=True)
     k = cache.k.at[:, :, :s].set(k_seq.astype(cache.k.dtype))
     v = cache.v.at[:, :, :s].set(v_seq.astype(cache.v.dtype))
     if lengths is None:
         lengths = jnp.full((b,), s, jnp.int32)
-    pos = jnp.arange(slots, dtype=jnp.int32)[None, :]
-    positions = jnp.where(pos < lengths[:, None], pos, -1)
+    if offsets is None:
+        offsets = jnp.zeros((b,), jnp.int32)
+    slot = jnp.arange(slots, dtype=jnp.int32)[None, :]
+    pos = slot - offsets[:, None]        # logical position held by a slot
+    filled = (pos >= 0) & (pos < lengths[:, None])
+    positions = jnp.where(filled, pos, -1)
     return KVCache(k=k, v=v, positions=positions, length=lengths,
-                   ring=cache.ring)
+                   offset=offsets, ring=cache.ring)

@@ -82,6 +82,7 @@ def _pick_chunk(s: int, target: int = 1024) -> int:
 
 def attention_train(p, cfg: ModelConfig, x: jnp.ndarray, *,
                     positions: Optional[jnp.ndarray] = None,
+                    kv_valid: Optional[jnp.ndarray] = None,
                     want_token_importance: bool = False,
                     chunk: int = 1024
                     ) -> Tuple[jnp.ndarray, Optional[jnp.ndarray],
@@ -94,6 +95,10 @@ def attention_train(p, cfg: ModelConfig, x: jnp.ndarray, *,
     causal key prefix (and, with a sliding window, only to the window's key
     range), cutting attention FLOPs ~2× (triangle vs square) without
     changing results.
+
+    ``kv_valid`` (B, S) masks keys out per row — False marks padding (a
+    right-aligned ragged batch pads rows on the left), so no query ever
+    attends to a pad and pads accumulate no received-attention mass.
 
     Returns (out (B,S,dm), token_importance (B,S) or None, (k, v) for
     prefill cache fill).
@@ -128,7 +133,10 @@ def attention_train(p, cfg: ModelConfig, x: jnp.ndarray, *,
         m = qi[:, None] >= kj[None, :]
         if cfg.sliding_window:
             m = m & (qi[:, None] - kj[None, :] < cfg.sliding_window)
-        logits = jnp.where(m[None, None, None], logits, _NEG_INF)
+        m = m[None, None, None]                       # (1, 1, 1, cq, hi-lo)
+        if kv_valid is not None:
+            m = m & kv_valid[:, None, None, None, lo:hi]
+        logits = jnp.where(m, logits, _NEG_INF)
         probs = jax.nn.softmax(logits, axis=-1)
         oc = jnp.einsum("bkgqp,bkpd->bkgqd", probs.astype(cdt),
                         vf[:, :, lo:hi])

@@ -34,8 +34,8 @@ from repro.models.config import ModelConfig
 from repro.quant.mixed import mixed_precision_matmul
 from repro.quant.qtensor import MixedPrecisionWeights
 
-__all__ = ["init_moe", "moe_apply", "moe_apply_sharded", "quantize_moe",
-           "MoEStats"]
+__all__ = ["init_moe", "moe_apply", "moe_apply_rows", "moe_apply_sharded",
+           "quantize_moe", "MoEStats"]
 
 
 @jax.tree_util.register_dataclass
@@ -91,7 +91,12 @@ def quantize_moe(p, cfg: ModelConfig) -> dict:
 def _capacity(cfg: ModelConfig, t: int) -> int:
     c = int(cfg.capacity_factor * t * cfg.num_experts_per_tok
             / cfg.num_experts)
-    return max(8, min(t, c))
+    # An expert can receive at most one capacity slot per token, so c > t
+    # buys nothing: min(t, ·) OUTSIDE the floor keeps tiny dispatches tiny
+    # (decode: t=1 -> capacity 1, not 8 — 8x less expert compute per row in
+    # the row-vmapped continuous-batching decode) and can never introduce
+    # drops that the old max(8, min(t, c)) floor would have avoided.
+    return min(t, max(8, c))
 
 
 def _expert_ffn(w_gate, w_up, w_down, xb: jnp.ndarray) -> jnp.ndarray:
@@ -119,6 +124,7 @@ def moe_apply(p, cfg: ModelConfig, x: jnp.ndarray, *,
               hh_mask: Optional[jnp.ndarray] = None,
               critical_mask: Optional[jnp.ndarray] = None,
               qweights: Optional[dict] = None,
+              token_valid: Optional[jnp.ndarray] = None,
               ) -> Tuple[jnp.ndarray, MoEStats]:
     """Apply the MoE layer to flattened tokens.
 
@@ -128,6 +134,10 @@ def moe_apply(p, cfg: ModelConfig, x: jnp.ndarray, *,
       critical_mask: (E,) bool — DyMoE precision selection; requires
         ``qweights``. None ⇒ full-precision (training) path.
       qweights: output of :func:`quantize_moe`.
+      token_valid: (T,) bool — False marks padding tokens of a ragged
+        batch: they take no capacity slot, produce zero output, and are
+        excluded from every routing statistic, so a padded row's stats
+        equal the unpadded row's.
     Returns:
       (y (T, dm), MoEStats)
     """
@@ -142,9 +152,14 @@ def moe_apply(p, cfg: ModelConfig, x: jnp.ndarray, *,
 
     flat_e = idx.reshape(-1)                             # (T*k,)
     oh = jax.nn.one_hot(flat_e, e, dtype=jnp.int32)      # (T*k, E)
+    if token_valid is not None:
+        valid_rep = jnp.repeat(token_valid.astype(bool), k)   # (T*k,)
+        oh = oh * valid_rep[:, None].astype(oh.dtype)
     pos = jnp.cumsum(oh, axis=0) - 1                     # running count
     pos_in_e = jnp.take_along_axis(pos, flat_e[:, None], axis=1)[:, 0]
     keep = pos_in_e < c
+    if token_valid is not None:
+        keep = keep & valid_rep   # pads: no slot, no gathered output
     slot = jnp.clip(pos_in_e, 0, c - 1)
 
     tok = jnp.repeat(jnp.arange(t), k)                   # (T*k,)
@@ -167,13 +182,23 @@ def moe_apply(p, cfg: ModelConfig, x: jnp.ndarray, *,
         hs = hs * jnp.einsum("td,edf->etf", x, p["shared_w_up"])
         y = y + jnp.einsum("etf,efd->td", hs, p["shared_w_down"])
 
-    # ----- statistics / losses -----
+    # ----- statistics / losses (over valid tokens only) -----
     onehot_top = jax.nn.one_hot(idx, e, dtype=jnp.float32)   # (T, k, E)
+    if token_valid is not None:
+        tv = token_valid.astype(jnp.float32)
+        onehot_top = onehot_top * tv[:, None, None]
+        n_valid = jnp.maximum(tv.sum(), 1.0)
+        frac_probs = jnp.einsum("te,t->e", probs, tv) / n_valid
+        z_loss = jnp.sum(jax.nn.logsumexp(logits, axis=-1) ** 2 * tv) \
+            / n_valid
+        dropped = 1.0 - keep.sum() / jnp.maximum(valid_rep.sum(), 1.0)
+    else:
+        frac_probs = probs.mean(axis=0)
+        z_loss = jnp.mean(jax.nn.logsumexp(logits, axis=-1) ** 2)
+        dropped = 1.0 - keep.mean()
     load = onehot_top.sum(axis=(0, 1))                       # (E,)
     frac_tokens = load / jnp.maximum(load.sum(), 1.0)
-    frac_probs = probs.mean(axis=0)
     lb_loss = e * jnp.sum(frac_tokens * frac_probs)
-    z_loss = jnp.mean(jax.nn.logsumexp(logits, axis=-1) ** 2)
     aux = cfg.router_aux_coef * lb_loss + cfg.router_z_coef * z_loss
 
     if hh_mask is None:
@@ -188,8 +213,98 @@ def moe_apply(p, cfg: ModelConfig, x: jnp.ndarray, *,
         expert_hh_load=hh_load,
         gate_mean=gate_mean,
         aux_loss=aux,
-        dropped_frac=1.0 - keep.mean(),
+        dropped_frac=dropped,
     )
+    return y, stats
+
+
+def moe_apply_rows(p, cfg: ModelConfig, x: jnp.ndarray,
+                   critical_rows: jnp.ndarray, qweights: dict
+                   ) -> Tuple[jnp.ndarray, dict]:
+    """Decode-time MoE where every row carries its OWN Critical mask.
+
+    The continuous-batching decode needs per-request precision selection
+    (a shared batch-mean mask would make a request's tokens depend on its
+    batch neighbours). Naively that means one expert dispatch per row —
+    B× the weight unpacking. Instead tokens are dispatched to one of TWO
+    shared capacity buffers per expert — a high-precision buffer and a
+    low-precision one — keyed by what the token's row selected for that
+    expert, and each buffer runs ONE grouped quant-matmul at a fixed
+    precision. Per-row precision semantics, batch-shared execution: the
+    weights are unpacked once per precision stream regardless of B, and
+    each token's math is bit-identical to the solo (B=1) path. Under
+    "4/0" (``low is None``) the low buffer is skipped outright — exact
+    zeros, no I/O, matching the solo kernel's zeroing of sub-critical
+    experts.
+
+    x: (B, dm) one token per row; critical_rows: (B, E) bool.
+    Returns (y (B, dm), per-row stats: {"active" (B, E) bool,
+    "gate_mean" (B, E), "router_logits" (B, E)}).
+    """
+    b, dm = x.shape
+    e, k = cfg.num_experts, cfg.num_experts_per_tok
+    c = b  # an (expert, precision) pair can receive at most one slot per
+    #        row, so capacity b can NEVER drop a token (parity with solo
+    #        decode, which never drops its single token)
+
+    logits = x.astype(jnp.float32) @ p["wg_router"]      # (B, E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gates, idx = jax.lax.top_k(probs, k)                 # (B, k)
+    gates = gates / jnp.maximum(gates.sum(-1, keepdims=True), 1e-9)
+
+    crit_tok = jnp.take_along_axis(critical_rows.astype(bool), idx, axis=1)
+    flat_e = idx.reshape(-1)                             # (B*k,)
+    flat_c = crit_tok.reshape(-1)
+    oh = jax.nn.one_hot(flat_e, e, dtype=jnp.int32)      # (B*k, E)
+
+    def dispatch(select):
+        ohs = oh * select[:, None].astype(oh.dtype)
+        pos = jnp.cumsum(ohs, axis=0) - 1
+        pos_in_e = jnp.take_along_axis(pos, flat_e[:, None], axis=1)[:, 0]
+        slot = jnp.clip(pos_in_e, 0, c - 1)
+        tok = jnp.repeat(jnp.arange(b), k)
+        xb = jnp.where(select[:, None], x[tok], 0)
+        buf = jnp.zeros((e, c, dm), x.dtype).at[flat_e, slot].add(
+            xb.astype(x.dtype), mode="drop")
+        return buf, slot
+
+    def ffn_fixed(prec: str, xb):
+        """SwiGLU with every expert at one fixed precision — branch-free
+        grouped streaming (the buffer already encodes the selection)."""
+        from repro.kernels.quant_matmul.ops import expert_quant_matmul_fixed
+
+        def mm(name, h):
+            return expert_quant_matmul_fixed(h, getattr(qweights[name],
+                                                        prec),
+                                             out_dtype=xb.dtype)
+        h = jax.nn.silu(mm("w_gate", xb)) * mm("w_up", xb)
+        return mm("w_down", h)
+
+    buf_hi, slot_hi = dispatch(flat_c)
+    y_hi = ffn_fixed("high", buf_hi)
+    skip_low = qweights["w_gate"].low is None            # "4/0"
+    if skip_low:
+        ye = jnp.where(flat_c[:, None], y_hi[flat_e, slot_hi], 0.0)
+    else:
+        buf_lo, slot_lo = dispatch(~flat_c)
+        y_lo = ffn_fixed("low", buf_lo)
+        ye = jnp.where(flat_c[:, None], y_hi[flat_e, slot_hi],
+                       y_lo[flat_e, slot_lo])
+    ye = ye * gates.reshape(-1, 1).astype(x.dtype)
+    y = ye.reshape(b, k, dm).sum(axis=1)
+
+    if cfg.num_shared_experts:
+        hs = jax.nn.silu(jnp.einsum("td,edf->etf", x, p["shared_w_gate"]))
+        hs = hs * jnp.einsum("td,edf->etf", x, p["shared_w_up"])
+        y = y + jnp.einsum("etf,efd->td", hs, p["shared_w_down"])
+
+    onehot_top = jax.nn.one_hot(idx, e, dtype=jnp.float32)    # (B, k, E)
+    load = onehot_top.sum(axis=1)                             # (B, E)
+    gate_sum = jnp.einsum("bke,bk->be", onehot_top,
+                          gates.astype(jnp.float32))
+    stats = dict(active=load > 0,
+                 gate_mean=gate_sum / jnp.maximum(load, 1.0),
+                 router_logits=logits)
     return y, stats
 
 
@@ -197,6 +312,7 @@ def moe_apply_sharded(p, cfg: ModelConfig, x: jnp.ndarray, *,
                       hh_mask: Optional[jnp.ndarray] = None,
                       critical_mask: Optional[jnp.ndarray] = None,
                       qweights: Optional[dict] = None,
+                      token_valid: Optional[jnp.ndarray] = None,
                       ) -> Tuple[jnp.ndarray, MoEStats]:
     """Data-local MoE dispatch (§Perf hillclimb A2).
 
@@ -215,7 +331,8 @@ def moe_apply_sharded(p, cfg: ModelConfig, x: jnp.ndarray, *,
     t = x.shape[0]
     if d <= 1 or t % d != 0:
         return moe_apply(p, cfg, x, hh_mask=hh_mask,
-                         critical_mask=critical_mask, qweights=qweights)
+                         critical_mask=critical_mask, qweights=qweights,
+                         token_valid=token_valid)
     xs = x.reshape(d, t // d, -1)
     if cfg.moe_dispatch_axes:
         from jax.sharding import PartitionSpec as P
@@ -223,16 +340,15 @@ def moe_apply_sharded(p, cfg: ModelConfig, x: jnp.ndarray, *,
         xs = jax.lax.with_sharding_constraint(
             xs, P(tuple(cfg.moe_dispatch_axes), u, u))
     hh = hh_mask.reshape(d, t // d) if hh_mask is not None else None
+    tv = token_valid.reshape(d, t // d) if token_valid is not None else None
 
-    def one(xi, hhi):
+    def one(xi, hhi, tvi):
         return moe_apply(p, cfg, xi, hh_mask=hhi,
-                         critical_mask=critical_mask, qweights=qweights)
+                         critical_mask=critical_mask, qweights=qweights,
+                         token_valid=tvi)
 
-    if hh is None:
-        y, st = jax.vmap(lambda xi: moe_apply(
-            p, cfg, xi, critical_mask=critical_mask, qweights=qweights))(xs)
-    else:
-        y, st = jax.vmap(one)(xs, hh)
+    y, st = jax.vmap(one, in_axes=(0, None if hh is None else 0,
+                                   None if tv is None else 0))(xs, hh, tv)
     stats = MoEStats(
         router_logits=st.router_logits.reshape(t, -1),
         expert_load=st.expert_load.sum(0),

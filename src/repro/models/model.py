@@ -35,7 +35,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.importance import heavy_hitter_mask, \
-    prefill_expert_importance, select_critical
+    prefill_expert_importance, select_critical, select_critical_rows
 from repro.core.prefetch import predict_next_gates, prefetch_targets
 from repro.core.schedule import critical_counts, retention_ratio
 from repro.models.config import ModelConfig
@@ -43,7 +43,8 @@ from repro.models.kv_cache import KVCache, fill_kv_cache, init_kv_cache
 from repro.models.layers.attention import attention_decode, attention_train, \
     init_attention
 from repro.models.layers.mlp import init_mlp, mlp, mlp_quantized, quantize_mlp
-from repro.models.layers.moe import init_moe, moe_apply_sharded, quantize_moe
+from repro.models.layers.moe import init_moe, moe_apply_rows, \
+    moe_apply_sharded, quantize_moe
 from repro.models.layers.norms import init_rmsnorm, rmsnorm
 from repro.models.layers.rotary import sinusoidal_embedding
 from repro.models.layers.ssm import init_mamba, init_ssm_cache, \
@@ -52,7 +53,8 @@ from repro.quant.qtensor import MixedPrecisionWeights
 
 __all__ = [
     "init_params", "quantize_model", "forward", "loss_fn", "train_step_fn",
-    "prefill", "decode_step", "decode_many", "init_decode_state", "DyMoEInfo",
+    "prefill", "decode_step", "decode_many", "decode_many_batched",
+    "init_decode_state", "DyMoEInfo",
 ]
 
 
@@ -333,19 +335,54 @@ def train_step_fn(cfg: ModelConfig, optimizer):
 # ------------------------------------------------------------------ prefill
 
 
+def _ragged_hh_mask(tok_imp: jnp.ndarray, frac: float,
+                    lengths: jnp.ndarray, valid: jnp.ndarray) -> jnp.ndarray:
+    """Per-row heavy-hitter mask for a right-aligned ragged batch: the
+    top-⌈frac·length_i⌉ threshold is taken over row i's REAL tokens only,
+    mirroring :func:`heavy_hitter_mask` on the unpadded row."""
+    ti = jnp.where(valid, tok_imp, -jnp.inf)
+    k = jnp.maximum(1, jnp.round(frac * lengths).astype(jnp.int32))  # (B,)
+    desc = -jnp.sort(-ti, axis=-1)
+    thresh = jnp.take_along_axis(desc, (k - 1)[:, None], axis=-1)
+    return ((ti >= thresh) & valid).astype(jnp.float32)
+
+
 def prefill(params, cfg: ModelConfig, tokens: Optional[jnp.ndarray] = None,
             *, embeds: Optional[jnp.ndarray] = None,
             qparams: Optional[dict] = None,
             cache_slots: Optional[int] = None,
             full_logits: bool = False,
+            lengths: Optional[jnp.ndarray] = None,
             ) -> Tuple[jnp.ndarray, Any, DyMoEInfo]:
     """Prefill pass. DyMoE active when ``qparams`` is given and policy on.
+
+    ``lengths`` (B,) enables RAGGED batches: ``tokens`` is right-aligned
+    (row i left-padded with ``S - lengths[i]`` pads), per-row position
+    offsets drive RoPE/sinusoidal embeddings, attention masks pad keys,
+    routing statistics exclude pad tokens, and the KV cache records the
+    per-row slot offset so decode continues at each row's own logical
+    position while writing to the uniform slot frontier S. The last-token
+    logits row ``x[:, -1]`` is every row's true last token — the point of
+    right alignment. Attention-based archs only (an SSM scan would thread
+    pads through its recurrent state).
 
     Returns (last-token logits (B, V), caches, DyMoEInfo). Caches are a
     stacked pytree: {"layers": KVCache/SSMCache with leading L,
     "shared": KVCache with leading n_sites (hybrid only)}.
     """
-    x = _embed(params, cfg, tokens, embeds)
+    b_, s_ = (tokens.shape if tokens is not None else embeds.shape[:2])
+    offsets = valid = positions = None
+    if lengths is not None:
+        assert cfg.block_kinds()[0] in ("attn_dense", "attn_moe"), \
+            "ragged prefill requires attention archs"
+        assert not cfg.shared_attn_every, \
+            "ragged prefill unsupported for shared-attention hybrids"
+        lengths = jnp.asarray(lengths, jnp.int32)
+        offsets = jnp.full((b_,), s_, jnp.int32) - lengths       # (B,)
+        idx = jnp.arange(s_, dtype=jnp.int32)[None, :]
+        valid = idx >= offsets[:, None]                          # (B, S)
+        positions = jnp.maximum(idx - offsets[:, None], 0)       # (B, S)
+    x = _embed(params, cfg, tokens, embeds, positions=positions)
     b, s, _ = x.shape
     dt = _dtype(cfg)
     dymoe_on = qparams is not None and cfg.dymoe.enabled
@@ -354,6 +391,8 @@ def prefill(params, cfg: ModelConfig, tokens: Optional[jnp.ndarray] = None,
     hybrid = bool(cfg.shared_attn_every)
     slots = cache_slots or (cfg.sliding_window or max(s, cfg.max_seq_len))
     ring = cfg.sliding_window is not None and slots == cfg.sliding_window
+    assert lengths is None or not ring, \
+        "ragged prefill unsupported with sliding-window ring caches"
 
     xs: Dict[str, Any] = {"block": params["layers"]}
     if dymoe_on:
@@ -400,10 +439,11 @@ def prefill(params, cfg: ModelConfig, tokens: Optional[jnp.ndarray] = None,
             want_imp = kind == "attn_moe"
             a, tok_imp, (k, v) = attention_train(
                 lp["attn"], cfg, rmsnorm(lp["norm1"], x, cfg.norm_eps),
+                positions=positions, kv_valid=valid,
                 want_token_importance=want_imp)
             cache = fill_kv_cache(
                 init_kv_cache(b, cfg.num_kv_heads, slots, cfg.head_dim, dt,
-                              ring), k, v)
+                              ring), k, v, lengths=lengths, offsets=offsets)
             x = x + a
             h = rmsnorm(lp["norm2"], x, cfg.norm_eps)
             if kind == "attn_dense":
@@ -414,10 +454,16 @@ def prefill(params, cfg: ModelConfig, tokens: Optional[jnp.ndarray] = None,
                 x = x + y
             else:
                 hflat = h.reshape(b * s, -1)
+                vflat = valid.reshape(b * s) if valid is not None else None
                 critical, hh = None, None
                 if dymoe_on:
-                    hh = heavy_hitter_mask(
-                        tok_imp, pol.heavy_hitter_frac).reshape(b * s)
+                    if valid is None:
+                        hh = heavy_hitter_mask(
+                            tok_imp, pol.heavy_hitter_frac).reshape(b * s)
+                    else:
+                        hh = _ragged_hh_mask(
+                            tok_imp, pol.heavy_hitter_frac, lengths,
+                            valid).reshape(b * s)
                     # router pre-pass: pick the Critical set BEFORE expert
                     # compute (Eq. 1-2 -> Eq. 5)
                     logits_r = hflat.astype(jnp.float32) @ lp["moe"][
@@ -426,18 +472,22 @@ def prefill(params, cfg: ModelConfig, tokens: Optional[jnp.ndarray] = None,
                     _, idx_r = jax.lax.top_k(probs_r,
                                              cfg.num_experts_per_tok)
                     oh = jax.nn.one_hot(idx_r, e, dtype=jnp.float32)
+                    if vflat is not None:  # pads route nowhere
+                        oh = oh * vflat.astype(jnp.float32)[:, None, None]
                     imp = prefill_expert_importance(
                         jnp.einsum("tke,t->e", oh, hh), oh.sum(axis=(0, 1)))
                     critical = select_critical(imp, xs_l["t_l"])
                 y, stats = moe_apply_sharded(
                     lp["moe"], cfg, hflat, hh_mask=hh,
                     critical_mask=critical,
-                    qweights=xs_l["q"]["moe"] if dymoe_on else None)
+                    qweights=xs_l["q"]["moe"] if dymoe_on else None,
+                    token_valid=vflat)
                 x = x + y.reshape(b, s, -1)
                 # look-ahead (Eq. 6-7) for the next layer's prefetcher
                 pg = predict_next_gates(hflat, xs_l["next_router"])
                 _, freq = prefetch_targets(pg, cfg.num_experts_per_tok,
-                                           pol.prefetch_topk)
+                                           pol.prefetch_topk,
+                                           token_valid=vflat)
                 telem = dict(
                     critical=(critical if critical is not None
                               else jnp.ones((e,), bool)),
@@ -515,9 +565,18 @@ def init_decode_state(cfg: ModelConfig, batch: int, seq_len: int) -> Any:
 
 def decode_step(params, cfg: ModelConfig, tokens: jnp.ndarray,
                 caches: Any, *, qparams: Optional[dict] = None,
+                per_row_moe: bool = False,
                 ) -> Tuple[jnp.ndarray, Any, DyMoEInfo]:
     """One decode step. tokens: (B,) int32. Returns (logits (B, V) f32,
-    caches, DyMoEInfo with gate-guided importance + Eq. 8 predictions)."""
+    caches, DyMoEInfo with gate-guided importance + Eq. 8 predictions).
+
+    ``per_row_moe`` (continuous-batching mode): the gate-guided Critical
+    set (Eq. 3) is selected PER ROW instead of from the batch-mean gate,
+    experts execute through the dual-buffer :func:`moe_apply_rows` (so a
+    row's precision — and its tokens — never depend on batch neighbours,
+    while weights still unpack once per precision stream, not per row),
+    and the telemetry leaves come back per row: (B, L, E) instead of
+    (L, E). Non-MoE archs are row-independent either way."""
     dt = _dtype(cfg)
     kind = cfg.block_kinds()[0]
     hybrid = bool(cfg.shared_attn_every)
@@ -582,24 +641,59 @@ def decode_step(params, cfg: ModelConfig, tokens: jnp.ndarray,
             else:
                 hflat = h.reshape(b, -1)
                 critical = None
-                if dymoe_on:
-                    # Eq. (3): gate-guided importance (batch-mean gate)
+                pg = None
+                if per_row_moe and dymoe_on:
+                    # Eq. (3) per row: each request's Critical set comes
+                    # from ITS OWN gate scores (solo-parity contract)
                     logits_r = hflat.astype(jnp.float32) @ lp["moe"][
                         "wg_router"]
-                    imp = jax.nn.softmax(logits_r, axis=-1).mean(axis=0)
-                    critical = select_critical(imp, xs_l["t_l"])
-                y, stats = moe_apply_sharded(
-                    lp["moe"], cfg, hflat, critical_mask=critical,
-                    qweights=xs_l["q"]["moe"] if dymoe_on else None)
+                    imp = jax.nn.softmax(logits_r, axis=-1)      # (B, E)
+                    critical = select_critical_rows(imp, xs_l["t_l"])
+                    y, rstats = moe_apply_rows(
+                        lp["moe"], cfg, hflat, critical,
+                        qweights=xs_l["q"]["moe"])
+                    active = rstats["active"]
+                    gate_mean = rstats["gate_mean"]
+                elif per_row_moe:
+                    y, stats = moe_apply_sharded(lp["moe"], cfg, hflat)
+                    # full precision: rows are independent already; only
+                    # the telemetry needs the per-row shape
+                    oh = jax.nn.one_hot(
+                        jax.lax.top_k(stats.router_logits,
+                                      cfg.num_experts_per_tok)[1],
+                        e, dtype=jnp.float32)                    # (B, k, E)
+                    active = oh.sum(axis=1) > 0
+                    gate_mean = jnp.broadcast_to(stats.gate_mean[None],
+                                                 active.shape)
+                    critical = jnp.ones(active.shape, bool)
+                else:
+                    if dymoe_on:
+                        # Eq. (3): gate-guided importance (batch-mean gate)
+                        logits_r = hflat.astype(jnp.float32) @ lp["moe"][
+                            "wg_router"]
+                        imp = jax.nn.softmax(logits_r, axis=-1).mean(axis=0)
+                        critical = select_critical(imp, xs_l["t_l"])
+                    y, stats = moe_apply_sharded(
+                        lp["moe"], cfg, hflat, critical_mask=critical,
+                        qweights=xs_l["q"]["moe"] if dymoe_on else None)
+                    active = stats.expert_load > 0
+                    gate_mean = stats.gate_mean
+                    if critical is None:
+                        critical = jnp.ones((e,), bool)
                 x = x + y.reshape(b, 1, -1)
                 pg = predict_next_gates(hflat, xs_l["next_router"])
-                _, freq = prefetch_targets(pg, cfg.num_experts_per_tok,
-                                           pol.prefetch_topk)
+                if per_row_moe:
+                    # per-row Eq. (8): each row's own predicted demand
+                    freq = jax.vmap(lambda g: prefetch_targets(
+                        g[None], cfg.num_experts_per_tok,
+                        pol.prefetch_topk)[1])(pg)               # (B, E)
+                else:
+                    _, freq = prefetch_targets(pg, cfg.num_experts_per_tok,
+                                               pol.prefetch_topk)
                 telem = dict(
-                    critical=(critical if critical is not None
-                              else jnp.ones((e,), bool)),
-                    active=stats.expert_load > 0,
-                    gate_mean=stats.gate_mean,
+                    critical=critical,
+                    active=active,
+                    gate_mean=gate_mean,
                     pred=freq,
                 )
         else:  # ssm
@@ -689,3 +783,77 @@ def decode_many(params, cfg: ModelConfig, tokens: jnp.ndarray, caches: Any,
     (_, caches, _), (toks, infos) = jax.lax.scan(
         body, (tokens, caches, key), steps)
     return toks, caches, infos
+
+
+# ------------------------------------------- continuous-batching decode
+
+
+def _mask_info_rows(info: DyMoEInfo, live: jnp.ndarray) -> DyMoEInfo:
+    """Zero finished rows' telemetry: a frozen slot routes to no experts,
+    so the orchestrator replay charges it neither I/O nor MoE compute.
+    Leaves are the per-row decode layout (L, B, E); ``live`` is (B,)."""
+    m = live[None, :, None]
+
+    def mb(x):
+        return None if x is None else x & m
+
+    def mf(x):
+        return None if x is None else x * m
+
+    return DyMoEInfo(critical_masks=mb(info.critical_masks),
+                     active_masks=mb(info.active_masks),
+                     gate_mean=mf(info.gate_mean),
+                     predicted_next=mf(info.predicted_next))
+
+
+def decode_many_batched(params, cfg: ModelConfig, tokens: jnp.ndarray,
+                        caches: Any, *, num_steps: int,
+                        done: jnp.ndarray, n_emitted: jnp.ndarray,
+                        limits: jnp.ndarray, eos_tokens: jnp.ndarray,
+                        qparams: Optional[dict] = None,
+                        ) -> Tuple[jnp.ndarray, Any, DyMoEInfo,
+                                   jnp.ndarray, jnp.ndarray]:
+    """Fused multi-step GREEDY decode over a slot batch with a per-row
+    done-mask — the device half of the continuous-batching scheduler.
+
+    Rows decode independently (``decode_step`` with ``per_row_moe``: own
+    Critical set and dual-buffer expert execution per row), so slot i's
+    tokens are bit-identical to solo decoding of that request regardless
+    of its neighbours. Per-row completion is enforced ON DEVICE inside the
+    scan: once a row samples its ``eos_tokens`` entry (-1 = none) or its
+    ``n_emitted`` count reaches ``limits``, the row freezes — its token
+    re-feeds unchanged, its KV/SSM cache stops advancing, and its
+    telemetry is zeroed so the modeled accounting charges finished (or
+    empty) slots nothing. The scheduler can therefore always dispatch
+    full ``num_steps`` chunks (one trace, no per-remainder recompiles)
+    and evict/admit at chunk boundaries.
+
+    tokens/done/n_emitted/limits/eos_tokens: (B,). Returns (tokens
+    (num_steps, B), caches, stacked DyMoEInfo with leaves (num_steps, L,
+    B, E), done (B,), n_emitted (B,)).
+    """
+    done = done.astype(bool)
+
+    def body(carry, _):
+        tok, caches, dn, emitted = carry
+        logits, new_caches, info = decode_step(
+            params, cfg, tok, caches, qparams=qparams, per_row_moe=True)
+        nxt = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        nxt = jnp.where(dn, tok, nxt)
+        live = ~dn
+
+        def freeze(new, old):  # finished rows' caches must not advance
+            mask = live.reshape((1, -1) + (1,) * (new.ndim - 2))
+            return jnp.where(mask, new, old)
+
+        caches = _tmap(freeze, new_caches, caches)
+        emitted = emitted + live.astype(jnp.int32)
+        dn = dn | ((eos_tokens >= 0) & (nxt == eos_tokens)) \
+            | (emitted >= limits)
+        info = _mask_info_rows(info, live)
+        return (nxt, caches, dn, emitted), (nxt, info)
+
+    (_, caches, done, n_emitted), (toks, infos) = jax.lax.scan(
+        body, (tokens, caches, done, jnp.asarray(n_emitted, jnp.int32)),
+        None, length=num_steps)
+    return toks, caches, infos, done, n_emitted

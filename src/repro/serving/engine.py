@@ -25,6 +25,16 @@ recovers the token-at-a-time loop (bit-identical greedy tokens and modeled
 numbers, just slower); ~16 amortizes dispatch away. EOS early-exit happens
 between chunks.
 
+**Continuous batching.** ``generate_batch`` serves its requests through
+:class:`repro.serving.scheduler.ContinuousBatchingScheduler`: a fixed set
+of device slots, admission by exact-shape solo prefill at chunk
+boundaries, per-row done-masks on device, and per-request telemetry
+replay — every request gets real modeled TTFT/TPOT and tokens
+bit-identical to a solo :meth:`DyMoEEngine.generate`. The old lockstep
+batch survives as ``generate_batch(static=True)`` (now ragged-capable via
+right-aligned padded prefill) and is the baseline the benchmark measures
+the scheduler against.
+
 Ablation rows map to :class:`EngineConfig` flags (cache / prefetch /
 dyquant / 4-2 vs 4-0), matching paper Table 3 rows 1–6.
 """
@@ -46,7 +56,8 @@ from repro.core.orchestrator import (
     StepTiming,
 )
 from repro.models import ModelConfig
-from repro.models.model import decode_many, prefill, quantize_model
+from repro.models.model import decode_many, decode_many_batched, prefill, \
+    quantize_model
 from repro.serving.cost_model import EdgeCostModel, EdgeProfile, expert_bytes
 from repro.serving.request import Request
 from repro.serving.sampler import sample_token
@@ -101,6 +112,11 @@ class DyMoEEngine:
         self._decode_many = jax.jit(
             partial(decode_many, cfg=cfg),
             static_argnames=("num_steps", "top_k"))
+        # slot-batched decode with per-row done-masks (the continuous-
+        # batching scheduler's device half)
+        self._decode_batched = jax.jit(
+            partial(decode_many_batched, cfg=cfg),
+            static_argnames=("num_steps",))
         self._orch: Optional[DynamicExpertOrchestrator] = None
 
     # ------------------------------------------------------------ system
@@ -275,39 +291,72 @@ class DyMoEEngine:
             decode_weight_bytes_per_tok=(
                 dec_wbytes / n_dec if decode_timings else None))
 
-    def generate_batch(self, requests: Sequence[Request], rng_key=None
-                       ) -> List[GenerationResult]:
-        """Batched greedy serving for equal-length prompts (throughput
-        path), decoding in fused chunks. Each row stops contributing at its
-        own ``max_new_tokens`` / ``eos_token``: decode runs until every row
-        is finished (checked between chunks) and outputs are trimmed
-        per-request."""
-        lens = {len(r.prompt_tokens) for r in requests}
-        assert len(lens) == 1, "batched path requires equal-length prompts"
+    def generate_batch(self, requests: Sequence[Request], rng_key=None, *,
+                       num_slots: Optional[int] = None,
+                       static: bool = False) -> List[GenerationResult]:
+        """Batched greedy serving (throughput path).
+
+        Default: CONTINUOUS BATCHING — requests stream through a fixed
+        set of ``num_slots`` device slots (see
+        :class:`repro.serving.scheduler.ContinuousBatchingScheduler`):
+        ragged prompt lengths, per-request ``max_new_tokens`` /
+        ``eos_token``, eviction of finished rows and admission of waiting
+        ones at every chunk boundary, per-row tokens bit-identical to solo
+        :meth:`generate`, and REAL per-request modeled TTFT/TPOT (the old
+        lockstep path returned NaN).
+
+        ``static=True`` keeps the old lockstep baseline: one batch for
+        the whole call, right-aligned padding for ragged prompts, decode
+        until every row finishes, DyMoE telemetry discarded (NaN modeled
+        metrics). It exists as the benchmark baseline continuous batching
+        is measured against."""
+        if static:
+            return self._generate_batch_static(requests)
+        from repro.serving.scheduler import ContinuousBatchingScheduler
+        return ContinuousBatchingScheduler(
+            self, num_slots=num_slots).run(requests)
+
+    def _generate_batch_static(self, requests: Sequence[Request]
+                               ) -> List[GenerationResult]:
+        """Lockstep baseline: every request occupies a row for the whole
+        call; ragged prompts are right-aligned into one padded batch
+        (per-row position/attention offsets threaded through ``prefill``);
+        rows that finish early keep burning device steps until the whole
+        batch drains. Per-row done state is tracked incrementally — only
+        each chunk's new tokens are scanned, not the whole history."""
         cfg = self.cfg
         if any(r.temperature > 0.0 for r in requests):
             warnings.warn("generate_batch decodes greedily; per-request "
                           "temperature is ignored")
-        prompts = jnp.asarray([r.prompt_tokens for r in requests], jnp.int32)
-        b, s = prompts.shape
+        lens = [len(r.prompt_tokens) for r in requests]
+        s = max(lens)
+        ragged = len(set(lens)) > 1
+        b = len(requests)
+        prompts = np.zeros((b, s), np.int32)
+        for i, r in enumerate(requests):
+            prompts[i, s - lens[i]:] = r.prompt_tokens   # right-aligned
         limits = [r.max_new_tokens for r in requests]
         eos = [r.eos_token for r in requests]
         max_new = max(limits)
         slots = cfg.sliding_window or (s + max_new)
         t0 = time.perf_counter()
-        logits, caches, _ = self._prefill(self.params, tokens=prompts,
-                                          qparams=self.qparams,
-                                          cache_slots=slots)
+        logits, caches, _ = self._prefill(
+            self.params, tokens=jnp.asarray(prompts), qparams=self.qparams,
+            cache_slots=slots,
+            lengths=jnp.asarray(lens, jnp.int32) if ragged else None)
         tok = sample_token(logits)
         rows = [[int(t)] for t in np.asarray(tok)]
 
-        def finished(i: int) -> bool:
-            row = rows[i][:limits[i]]
-            return len(row) >= limits[i] or \
-                (eos[i] is not None and eos[i] in row)
+        # incremental done tracking: a row is re-examined only over tokens
+        # it gained this chunk (the old finished() closure re-sliced and
+        # rescanned every row's full history after every chunk — O(n^2))
+        done = [len(rows[i]) >= limits[i]
+                or (eos[i] is not None and rows[i][0] == eos[i])
+                for i in range(b)]
+        remaining = b - sum(done)
 
         n_done = 1  # tokens sampled per row so far
-        while n_done < max_new and not all(map(finished, range(b))):
+        while n_done < max_new and remaining:
             chunk = min(self.ecfg.decode_chunk, max_new - n_done)
             toks_d, caches, _ = self._decode_many(
                 self.params, tokens=tok, caches=caches,
@@ -315,7 +364,14 @@ class DyMoEEngine:
             tok = toks_d[-1]
             toks_np = np.asarray(toks_d)      # one transfer per chunk
             for i in range(b):
-                rows[i].extend(int(t) for t in toks_np[:, i])
+                new = [int(t) for t in toks_np[:, i]]
+                rows[i].extend(new)
+                if not done[i]:
+                    hit_eos = eos[i] is not None and any(
+                        t == eos[i] for t in new[:limits[i] - n_done])
+                    if hit_eos or len(rows[i]) >= limits[i]:
+                        done[i] = True
+                        remaining -= 1
             n_done += chunk
         wall = time.perf_counter() - t0
         out = []

@@ -15,3 +15,17 @@ class Request:
     top_k: int = 0
     eos_token: Optional[int] = None   # stop (inclusive) when sampled
     request_id: Optional[str] = None
+
+    def __post_init__(self):
+        # fail at submission, not mid-chunk inside the scheduler, where a
+        # malformed request would poison a whole slot batch
+        if len(self.prompt_tokens) == 0:
+            raise ValueError("Request.prompt_tokens must be non-empty")
+        if self.max_new_tokens < 1:
+            raise ValueError(
+                f"Request.max_new_tokens must be >= 1, "
+                f"got {self.max_new_tokens}")
+
+    @property
+    def prompt_len(self) -> int:
+        return len(self.prompt_tokens)

@@ -1,0 +1,252 @@
+"""Continuous-batching scheduler — request-level scheduling at chunk
+boundaries (ROADMAP: continuous batching; cf. D²MoE's dynamic request
+scheduling, arXiv 2504.15299).
+
+The chunked decode loop (PR 2) created a natural scheduling point: between
+two fused ``decode_chunk`` device dispatches the host holds the batch
+state anyway. This module owns a FIFO request queue and a fixed set of
+``num_slots`` device slots and, at every chunk boundary:
+
+  * **evicts** finished rows (their per-row done-mask froze them on device
+    mid-chunk: token re-fed, caches pinned, telemetry zeroed — see
+    :func:`repro.models.model.decode_many_batched`), finalizing their
+    per-request results;
+  * **admits** waiting requests into freed slots by running an
+    exact-shape solo prefill and injecting the resulting KV/SSM cache
+    into the slot's row of the batched cache pytree.
+
+Ragged prompt lengths need no padding on this path: each admission
+prefills at its true length into an ``S_slots``-sized cache, and decode
+reads per-row lengths/positions from the KV cache itself. (The
+right-aligned padded *batched* prefill in :func:`repro.models.model.
+prefill` serves the static lockstep baseline this scheduler is benched
+against.)
+
+Two properties the design buys:
+
+  * **Per-request math parity** — admission prefill is the same B=1
+    program ``generate`` runs, and decode rows are vmapped independent
+    B=1 programs (own gate-guided Critical set per row), so every slot's
+    greedy tokens are bit-identical to serving that request alone.
+  * **Per-request system accounting** — each row's ``(T, L, E)``
+    telemetry block is replayed through the ONE shared
+    :class:`DynamicExpertOrchestrator` (requests share the device's
+    expert cache, as they would share VRAM), yielding real modeled
+    TTFT at admission and per-token latencies per request — the numbers
+    ``generate_batch`` used to return as NaN.
+
+Decoding is greedy (per-request temperature falls back with a warning,
+matching the historical ``generate_batch`` contract).
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+import warnings
+from collections import deque
+from functools import partial
+from typing import Deque, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.orchestrator import StepTiming
+from repro.models.model import init_decode_state
+from repro.serving.request import Request
+
+__all__ = ["SchedulerConfig", "ContinuousBatchingScheduler"]
+
+
+@dataclasses.dataclass(frozen=True)
+class SchedulerConfig:
+    num_slots: int = 4            # concurrent device slots (decode batch)
+    max_chunks: Optional[int] = None  # safety valve; None = auto bound
+
+
+@dataclasses.dataclass
+class _SlotState:
+    """Host-side bookkeeping for one admitted request."""
+
+    index: int                    # position in the submitted request list
+    request: Request
+    tokens: List[int]
+    prompt_len: int
+    ttft_s: float
+    prefill_timing: Optional[StepTiming]
+    prefill_weight_bytes: int
+    step_totals: List[float] = dataclasses.field(default_factory=list)
+    decode_timings: List[StepTiming] = dataclasses.field(
+        default_factory=list)
+    decode_weight_bytes: int = 0
+
+
+class ContinuousBatchingScheduler:
+    """Serve a stream of requests through a fixed slot batch.
+
+    Built ON TOP of a :class:`repro.serving.engine.DyMoEEngine`: it reuses
+    the engine's jitted prefill, its telemetry replay and its orchestrator
+    factory, and drives the engine's jitted
+    :func:`~repro.models.model.decode_many_batched`. Every chunk runs the
+    full static ``decode_chunk`` length regardless of per-row remaining
+    budgets (frozen rows are free in the modeled accounting and keep the
+    trace count at one), so admission/eviction never recompiles.
+    """
+
+    def __init__(self, engine, num_slots: Optional[int] = None,
+                 scfg: SchedulerConfig = SchedulerConfig()):
+        self.engine = engine
+        self.scfg = scfg
+        self._num_slots = num_slots  # None: resolved per run()
+
+    # ----------------------------------------------------------- helpers
+    def _slot_budget(self, requests: Sequence[Request]) -> int:
+        cfg = self.engine.cfg
+        if cfg.sliding_window:
+            return cfg.sliding_window
+        return max(len(r.prompt_tokens) + r.max_new_tokens
+                   for r in requests)
+
+    # jitted (slot index traced, batch donated): admission costs ONE fused
+    # dispatch instead of one eager scatter per cache leaf
+    @staticmethod
+    @partial(jax.jit, donate_argnums=0)
+    def _inject_row(batch_caches, row_caches, r):
+        """Overwrite slot ``r`` of the batched cache pytree with a freshly
+        prefilled B=1 cache (their per-layer/site leaves agree on every
+        dim except batch)."""
+        return jax.tree.map(lambda full, one: full.at[:, r].set(one[:, 0]),
+                            batch_caches, row_caches)
+
+    # --------------------------------------------------------------- run
+    def run(self, requests: Sequence[Request]) -> List:
+        from repro.serving.engine import GenerationResult  # cycle-free
+
+        engine = self.engine
+        cfg = engine.cfg
+        if not requests:
+            return []
+        if any(r.temperature > 0.0 for r in requests):
+            warnings.warn("continuous batching decodes greedily; "
+                          "per-request temperature is ignored")
+        b = self._num_slots or min(len(requests),
+                                   self.scfg.num_slots)
+        b = max(1, min(b, len(requests)))
+        slots_len = self._slot_budget(requests)
+        chunk = engine.ecfg.decode_chunk
+        orch = engine._make_orchestrator()  # ONE shared cache + clock
+
+        queue: Deque[Tuple[int, Request]] = deque(enumerate(requests))
+        results: List[Optional[GenerationResult]] = [None] * len(requests)
+        states: List[Optional[_SlotState]] = [None] * b
+        caches = init_decode_state(cfg, b, slots_len)
+        tok = np.zeros(b, np.int32)
+        done = np.ones(b, bool)            # empty slots stay frozen
+        emitted = np.zeros(b, np.int32)
+        limits = np.zeros(b, np.int32)
+        eos = np.full(b, -1, np.int32)
+        t0 = time.perf_counter()
+
+        def finalize(r: int) -> None:
+            st = states[r]
+            n_dec = max(len(st.tokens) - 1, 1)
+            results[st.index] = GenerationResult(
+                tokens=st.tokens,
+                ttft_s=float(st.ttft_s),
+                tpot_s=float(sum(st.step_totals) / n_dec),
+                wall_s=time.perf_counter() - t0,
+                prefill_timing=st.prefill_timing,
+                decode_timings=st.decode_timings or None,
+                cache_stats=(dataclasses.asdict(orch.cache.stats)
+                             if orch else None),
+                prefill_weight_bytes=(st.prefill_weight_bytes
+                                      if orch else None),
+                decode_weight_bytes_per_tok=(
+                    st.decode_weight_bytes / n_dec
+                    if st.decode_timings else None))
+            states[r] = None
+
+        def admit(r: int) -> None:
+            nonlocal caches
+            idx, req = queue.popleft()
+            prompt = jnp.asarray(req.prompt_tokens, jnp.int32)[None, :]
+            s = prompt.shape[1]
+            logits, rcaches, info = engine._prefill(
+                engine.params, tokens=prompt, qparams=engine.qparams,
+                cache_slots=slots_len)
+            crit, act, pred = jax.device_get(
+                (info.critical_masks, info.active_masks,
+                 info.predicted_next))
+            timings, totals, wbytes = engine._replay(
+                crit, act, pred, phase="prefill",
+                s_ctx=np.asarray([s]), s_q=s, orch=orch)
+            first = int(jax.device_get(jnp.argmax(logits, axis=-1))[0])
+            states[r] = _SlotState(
+                index=idx, request=req, tokens=[first], prompt_len=s,
+                ttft_s=(timings[0].total_s if timings else totals[0]),
+                prefill_timing=timings[0] if timings else None,
+                prefill_weight_bytes=wbytes)
+            if req.max_new_tokens <= 1 or (req.eos_token is not None
+                                           and first == req.eos_token):
+                finalize(r)        # one-token request: never holds a slot
+                return
+            caches = self._inject_row(caches, rcaches, r)
+            tok[r] = first
+            done[r] = False
+            emitted[r] = 1
+            limits[r] = req.max_new_tokens
+            eos[r] = -1 if req.eos_token is None else req.eos_token
+
+        n_chunks = 0
+        max_chunks = self.scfg.max_chunks or (
+            sum(-(-max(r.max_new_tokens - 1, 0) // chunk)
+                for r in requests) + len(requests) + 1)
+        while queue or not done.all():
+            for r in range(b):        # admission at the chunk boundary
+                while queue and done[r] and states[r] is None:
+                    admit(r)
+            if done.all():
+                continue              # drained mid-admission (1-token reqs)
+            emitted_before = emitted.copy()
+            toks_d, caches, infos, done_d, emitted_d = \
+                engine._decode_batched(
+                    engine.params, tokens=jnp.asarray(tok),
+                    caches=caches, num_steps=chunk,
+                    done=jnp.asarray(done), n_emitted=jnp.asarray(emitted),
+                    limits=jnp.asarray(limits), eos_tokens=jnp.asarray(eos),
+                    qparams=engine.qparams)
+            # the chunk's ONE device->host transfer: tokens, done/emitted
+            # masks, and the three telemetry leaves the replay consumes
+            toks_np, done, emitted, crit, act, pred = jax.device_get(
+                (toks_d, done_d, emitted_d, infos.critical_masks,
+                 infos.active_masks, infos.predicted_next))
+            toks_np = np.asarray(toks_np)
+            done = np.array(done)          # device_get views are read-only
+            emitted = np.array(emitted)
+            tok = toks_np[-1].copy()
+            for r in range(b):
+                st = states[r]
+                if st is None:
+                    continue
+                keep = int(emitted[r] - emitted_before[r])
+                if keep:   # this row's live steps are the chunk's first
+                    st.tokens.extend(int(t) for t in toks_np[:keep, r])
+                    # telemetry leaves are (T, L, B, E): this row's block
+                    timings, totals, wbytes = engine._replay(
+                        None if crit is None else crit[:keep, :, r],
+                        None if act is None else act[:keep, :, r],
+                        None if pred is None else pred[:keep, :, r],
+                        phase="decode",
+                        s_ctx=st.prompt_len + emitted_before[r]
+                        + np.arange(keep),
+                        s_q=1, orch=orch)
+                    st.step_totals.extend(totals)
+                    st.decode_timings.extend(timings)
+                    st.decode_weight_bytes += wbytes
+                if done[r]:
+                    finalize(r)       # evict: the slot is free to admit
+            n_chunks += 1
+            assert n_chunks <= max_chunks, \
+                f"scheduler made no progress after {n_chunks} chunks"
+        assert all(res is not None for res in results)
+        return results

@@ -66,10 +66,40 @@ def test_prefetch_counts_separately():
     assert missed == 0  # prefetched => hit on use
 
 
-def test_entry_larger_than_capacity_rejected():
+def test_entry_larger_than_capacity_degrades_to_bypass():
+    """A blob bigger than the whole budget must NOT crash the request
+    (the old ValueError killed `generate` mid-flight on tiny VRAM budgets):
+    it streams through as a bypass load — charged in full every time,
+    never resident, counted in stats, warned about once."""
     c = mk(capacity=50)
-    with pytest.raises(ValueError):
-        c.get((0, 0), "high", nbytes=HB)
+    with pytest.warns(UserWarning, match="bypass"):
+        entry, missed = c.get((0, 0), "high", nbytes=HB)
+    assert missed == HB
+    assert entry.nbytes == HB
+    assert (0, 0) not in c and c.used_bytes == 0
+    # every repeat pays the full transfer again — and warns only once
+    import warnings as _w
+    with _w.catch_warnings():
+        _w.simplefilter("error")
+        _, missed = c.get((0, 0), "high", nbytes=HB)
+    assert missed == HB
+    assert c.stats.bypass_loads == 2 and c.stats.misses == 2
+    assert c.stats.bytes_loaded == 2 * HB
+    # prefetching an unadmittable blob moves nothing at all
+    assert c.prefetch((0, 1), "high", nbytes=HB) == 0
+    assert c.stats.prefetch_bytes == 0
+    # a promotion attempt that bypasses must KEEP the servable low copy
+    c.get((0, 3), "low", nbytes=LB)
+    _, m = c.get((0, 3), "high", nbytes=HB)   # 100B > capacity: bypass
+    assert m == HB
+    assert c.resident_precision((0, 3)) == "low"   # not thrashed
+    assert c.stats.promotions == 0
+    _, m = c.get((0, 3), "low", nbytes=LB)
+    assert m == 0  # still a hit
+    # normal-sized entries still work alongside bypasses
+    _, m = c.get((0, 2), "low", nbytes=LB)
+    assert m == LB and (0, 2) in c
+    c.invariant_check()
 
 
 @given(ops=st.lists(

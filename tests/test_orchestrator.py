@@ -113,6 +113,99 @@ def test_step_batch_matches_scalar_oracle(kw):
         dataclasses.asdict(b.cache.stats)
 
 
+def test_zero_prediction_prefetches_nothing():
+    """Regression: argsort(-pred)[:topk] on an all-zero prediction used to
+    fabricate phantom prefetches of experts 0..topk-1 at every layer,
+    polluting the cache and inflating prefetch_bytes."""
+    for run_batch in (False, True):
+        orch = DynamicExpertOrchestrator(_cfg())
+        cm, am = _masks()
+        zeros = [np.zeros(8) for _ in range(4)]
+        if run_batch:
+            t = orch.step_batch(np.asarray(cm)[None], np.asarray(am)[None],
+                                np.asarray(zeros)[None], [[0.01] * 4])[0]
+        else:
+            t = orch.step(cm, am, zeros, [0.01] * 4)
+        assert all(l.prefetch_bytes == 0 for l in t.layers), run_batch
+        assert orch.cache.stats.prefetch_bytes == 0
+        # nothing speculative may be resident: only the demanded experts
+        assert all(k[1] in (0, 1, 2) for k in orch.cache._entries)
+
+
+def test_partial_zero_prediction_prefetches_only_positive():
+    orch = DynamicExpertOrchestrator(_cfg(prefetch_topk=3))
+    cm, am = _masks()
+    pred = [np.zeros(8) for _ in range(4)]
+    for p in pred:
+        p[5] = 0.7  # exactly one expert with real predicted demand
+    t = orch.step(cm, am, pred, [0.01] * 4)
+    assert all(l.prefetch_bytes == 100 for l in t.layers[:-1])
+    assert t.layers[-1].prefetch_bytes == 0  # no layer beyond the last
+
+
+def test_late_prefetch_charges_residual_stall():
+    """Regression for the write-only _dma_tail: a prefetch issued during a
+    compute window too small to cover the transfer must NOT count as
+    instantly resident — the next layer waits for the residual."""
+    # bytes_high=100, bw=1000 -> 0.1 s per transfer
+    cm, am = _masks(crit=(0, 1), active=(0, 1))
+    pred = [np.isin(np.arange(8), (0, 1)).astype(float)] * 4
+
+    def stalls(compute_window):
+        orch = DynamicExpertOrchestrator(_cfg())
+        t = orch.step(cm, am, pred, [compute_window] * 4)
+        return [l.stall_s for l in t.layers], orch
+
+    # tiny window: the two 0.1s prefetches can't finish inside 0.01s of
+    # compute -> layers 1..3 stall on the residual (but less than the
+    # 0.2s cold demand load of layer 0 would cost)
+    tight, orch_t = stalls(0.01)
+    assert tight[0] == pytest.approx(0.2)
+    for s in tight[1:]:
+        assert 0.0 < s < 0.2
+    # huge window: prefetches arrive in time -> zero stall, counted hits
+    wide, orch_w = stalls(10.0)
+    assert wide[0] == pytest.approx(0.2)
+    assert all(s == 0.0 for s in wide[1:])
+    assert orch_w.cache.stats.prefetch_hits == 6  # 2 experts x layers 1..3
+    # prefetching must never be worse than not prefetching at all
+    orch_no = DynamicExpertOrchestrator(_cfg(enable_prefetch=False))
+    t_no = orch_no.step(cm, am, pred, [0.01] * 4)
+    assert sum(tight) <= t_no.stall_s + 1e-12
+
+
+def test_late_prefetch_capped_at_demand_cost():
+    """The residual wait is capped by what a demand load of the same bytes
+    would cost from layer start — a deep prefetch queue can't make
+    prefetching slower than load-on-demand."""
+    cm, am = _masks(crit=(0,), active=(0,))
+    # predict huge demand: topk=8 queues 8 transfers = 0.8s behind layer 0
+    pred = [np.ones(8)] * 4
+    orch = DynamicExpertOrchestrator(_cfg(prefetch_topk=8))
+    t = orch.step(cm, am, pred, [0.01] * 4)
+    # layer 1 requires only expert 0 (prefetched, in flight): the wait is
+    # capped at one demand transfer (0.1s), not the 0.8s queue tail
+    assert t.layers[1].stall_s <= 0.1 + 1e-12
+
+
+def test_evicted_prefetch_not_counted_as_hit():
+    """A prefetch that was evicted before use and then demand-reloaded
+    must be charged as a plain miss — not counted as a prefetch hit, and
+    its stale arrival time must not add stall on top of the miss bytes."""
+    # capacity fits ONE 100B expert: the two layer-1 prefetches evict
+    # each other, then layer 1 demand-loads both
+    cfg = _cfg(vram_budget_bytes=150, prefetch_topk=2, num_layers=2)
+    orch = DynamicExpertOrchestrator(cfg)
+    cm, am = _masks(L=2, E=8, crit=(0, 1), active=(0, 1))
+    pred = [np.isin(np.arange(8), (0, 1)).astype(float)] * 2
+    t = orch.step(cm, am, pred, [0.01] * 2)
+    assert orch.cache.stats.prefetch_hits == 0
+    # layer 1: both experts are plain 100B misses, nothing extra
+    assert t.layers[1].required_bytes_missed == 200
+    assert t.layers[1].stall_s == pytest.approx(200 / 1000.0)
+    assert not orch._pending_prefetch  # records settled, not leaked
+
+
 def test_step_batch_none_pred_disables_prefetch():
     a = DynamicExpertOrchestrator(_cfg())
     b = DynamicExpertOrchestrator(_cfg())

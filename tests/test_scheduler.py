@@ -1,0 +1,255 @@
+"""Continuous-batching scheduler: admission/eviction at chunk boundaries,
+per-row done-masks, ragged right-aligned prefill, and the acceptance
+contract — every request served through the slot batch yields greedy
+tokens bit-identical to a solo ``generate`` of that request, with finite
+per-request modeled TTFT/TPOT."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.models import decode_many, decode_many_batched, init_params, \
+    prefill, quantize_model
+from repro.models.config import DyMoEPolicy, ModelConfig
+from repro.serving import ContinuousBatchingScheduler, DyMoEEngine, \
+    EngineConfig, Request
+from repro.serving.cost_model import EdgeProfile
+
+
+@pytest.fixture(scope="module")
+def moe_setup():
+    cfg = ModelConfig(
+        name="t", arch_type="moe", num_layers=3, d_model=64, vocab_size=512,
+        num_heads=4, num_kv_heads=2, head_dim=16, num_experts=8,
+        num_experts_per_tok=2, moe_d_ff=64, capacity_factor=4.0,
+        dtype="float32", remat="none",
+        dymoe=DyMoEPolicy(low_bits=2, retention=0.75))
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    return cfg, params
+
+
+def _ragged_requests(rng, specs):
+    return [Request(prompt_tokens=rng.integers(1, 512, n).tolist(),
+                    max_new_tokens=m, eos_token=e)
+            for n, m, e in specs]
+
+
+# ------------------------------------------------------------ acceptance
+
+
+def test_ragged_stream_matches_solo_generate_bitwise(moe_setup):
+    """THE acceptance criterion: a ragged request stream (mixed prompt
+    lengths, mixed max_new_tokens / eos_token) served through the slot
+    batch produces, per request, exactly the tokens a solo generate()
+    yields — and real finite modeled TTFT/TPOT instead of NaN."""
+    cfg, params = moe_setup
+    eng = DyMoEEngine(cfg, params, EngineConfig(
+        profile=EdgeProfile().with_vram(16), decode_chunk=4))
+    rng = np.random.default_rng(5)
+    reqs = _ragged_requests(rng, [
+        (12, 9, None), (7, 5, None), (9, 14, None),
+        (12, 3, None), (7, 7, None), (9, 2, None), (5, 11, None)])
+    # give one request a real mid-stream eos (taken from its solo run)
+    solo2 = eng.generate(reqs[2])
+    eos = solo2.tokens[4]
+    if eos not in solo2.tokens[:4]:   # only if it truly stops mid-stream
+        reqs[2] = dataclasses.replace(reqs[2], eos_token=eos)
+    out = eng.generate_batch(reqs, num_slots=3)
+    assert len(out) == len(reqs)
+    for req, res in zip(reqs, out):
+        solo = eng.generate(req)
+        assert res.tokens == solo.tokens
+        assert np.isfinite(res.ttft_s) and res.ttft_s > 0
+        assert np.isfinite(res.tpot_s) and res.tpot_s > 0
+        assert res.wall_s > 0
+
+
+def test_scheduler_respects_slot_budget_and_order(moe_setup):
+    """More requests than slots: everything is served, results come back
+    in submission order, and shrinking the slot count never changes any
+    request's tokens (slots are independent B=1 programs)."""
+    cfg, params = moe_setup
+    eng = DyMoEEngine(cfg, params, EngineConfig(decode_chunk=4))
+    rng = np.random.default_rng(7)
+    reqs = _ragged_requests(rng, [(8, 6, None), (11, 4, None), (6, 8, None),
+                                  (9, 5, None), (8, 3, None)])
+    by_slots = {k: eng.generate_batch(reqs, num_slots=k) for k in (1, 2, 5)}
+    for k, out in by_slots.items():
+        assert [r.tokens for r in out] == \
+            [r.tokens for r in by_slots[1]], k
+
+
+def test_scheduler_admits_into_freed_slots(moe_setup):
+    """Eviction frees capacity mid-run: with 2 slots and a straggler, the
+    short requests must rotate through the freed slot (the run finishes
+    in far fewer chunks than serial execution would need)."""
+    cfg, params = moe_setup
+    eng = DyMoEEngine(cfg, params, EngineConfig(decode_chunk=2))
+    rng = np.random.default_rng(9)
+    reqs = _ragged_requests(rng, [(8, 16, None)] + [(6, 3, None)] * 4)
+    sched = ContinuousBatchingScheduler(eng, num_slots=2)
+    out = sched.run(reqs)
+    assert [len(r.tokens) for r in out] == [16, 3, 3, 3, 3]
+    for req, res in zip(reqs, out):
+        assert res.tokens == eng.generate(req).tokens
+    # per-request accounting came through the shared orchestrator
+    assert all(len(r.decode_timings) == len(r.tokens) - 1 for r in out)
+
+
+def test_one_token_and_empty_edge_cases(moe_setup):
+    cfg, params = moe_setup
+    eng = DyMoEEngine(cfg, params, EngineConfig())
+    assert eng.generate_batch([]) == []
+    reqs = [Request(prompt_tokens=list(range(1, 9)), max_new_tokens=1),
+            Request(prompt_tokens=list(range(1, 7)), max_new_tokens=5)]
+    out = eng.generate_batch(reqs, num_slots=1)
+    assert len(out[0].tokens) == 1 and out[0].tpot_s == 0.0
+    assert out[0].tokens == eng.generate(reqs[0]).tokens
+    assert len(out[1].tokens) == 5
+
+
+def test_request_validation():
+    with pytest.raises(ValueError, match="non-empty"):
+        Request(prompt_tokens=[])
+    with pytest.raises(ValueError, match="max_new_tokens"):
+        Request(prompt_tokens=[1], max_new_tokens=0)
+
+
+# ------------------------------------------------- device-side done mask
+
+
+def test_decode_many_batched_freezes_finished_rows(moe_setup):
+    """Rows past their limit/eos freeze ON DEVICE: token re-fed, cache
+    length pinned, telemetry zeroed — the scheduler's eviction contract."""
+    cfg, params = moe_setup
+    qp = quantize_model(params, cfg)
+    prompt = jax.random.randint(jax.random.PRNGKey(1), (3, 10), 1, 512)
+    logits, caches, _ = prefill(params, cfg, prompt, qparams=qp,
+                                cache_slots=30)
+    tok0 = jnp.argmax(logits, -1).astype(jnp.int32)
+    toks, caches2, infos, done, emitted = decode_many_batched(
+        params, cfg, tok0, caches, num_steps=6,
+        done=jnp.asarray([False, False, True]),
+        n_emitted=jnp.asarray([1, 1, 0], jnp.int32),
+        limits=jnp.asarray([7, 3, 0], jnp.int32),
+        eos_tokens=jnp.full((3,), -1, jnp.int32), qparams=qp)
+    toks = np.asarray(toks)
+    done = np.asarray(done)
+    emitted = np.asarray(emitted)
+    lengths = np.asarray(caches2["layers"].length)
+    # row 0: ran all 6 steps (7 total emitted), cache advanced by 6
+    assert emitted[0] == 7 and done[0]
+    assert (lengths[:, 0] == 16).all()
+    # row 1: froze after 2 more tokens (limit 3), cache advanced by 2,
+    # its token column repeats the frozen token afterwards
+    assert emitted[1] == 3 and done[1]
+    assert (lengths[:, 1] == 12).all()
+    assert (toks[2:, 1] == toks[1, 1]).all()
+    # row 2 was never live: untouched cache, zeroed telemetry
+    assert (lengths[:, 2] == 10).all()
+    act = np.asarray(infos.active_masks)           # (T, L, B, E)
+    assert act[:, :, 2].sum() == 0
+    assert act[2:, :, 1].sum() == 0 and act[:2, :, 1].sum() > 0
+    assert act[:, :, 0].sum() > 0
+
+
+def test_decode_many_batched_rows_match_decode_many(moe_setup):
+    """A live row of the slot-batched decode is bit-identical to the solo
+    fused decode loop `generate` uses. The rows are assembled the way the
+    scheduler assembles them — each prefilled SOLO (per-request critical
+    masks) and injected into the slot batch — because the batch-shared
+    prefill couples rows through its aggregated Critical set."""
+    cfg, params = moe_setup
+    qp = quantize_model(params, cfg)
+    prompts = [jax.random.randint(jax.random.PRNGKey(s), (1, 8), 1, 512)
+               for s in (2, 3)]
+    solos, row_caches, t0s = [], [], []
+    for p in prompts:
+        lg, c, _ = prefill(params, cfg, p, qparams=qp, cache_slots=20)
+        t0 = jnp.argmax(lg, -1).astype(jnp.int32)
+        t, _, _ = decode_many(params, cfg, t0, c, num_steps=5, qparams=qp)
+        solos.append(np.asarray(t)[:, 0])
+        row_caches.append(c)
+        t0s.append(t0)
+    c = jax.tree.map(lambda a, b: jnp.concatenate([a, b], axis=1),
+                     *row_caches)
+    toks, _, _, _, _ = decode_many_batched(
+        params, cfg, jnp.concatenate(t0s), c, num_steps=5,
+        done=jnp.zeros((2,), bool), n_emitted=jnp.ones((2,), jnp.int32),
+        limits=jnp.full((2,), 9, jnp.int32),
+        eos_tokens=jnp.full((2,), -1, jnp.int32), qparams=qp)
+    toks = np.asarray(toks)
+    np.testing.assert_array_equal(toks[:, 0], solos[0])
+    np.testing.assert_array_equal(toks[:, 1], solos[1])
+
+
+# ------------------------------------------- ragged right-aligned prefill
+
+
+def test_ragged_prefill_rows_match_solo_prefill(moe_setup):
+    """Right-aligned padded batched prefill (positions/attention offsets,
+    pad-excluded routing stats) reproduces each row's solo-prefill logits
+    bit-for-bit in the full-precision path, and greedy decode continues
+    per row from the ragged caches exactly as from solo caches."""
+    cfg, params = moe_setup
+    rng = np.random.default_rng(3)
+    lens = [12, 7, 9]
+    s = max(lens)
+    prompts = [rng.integers(1, 512, n).tolist() for n in lens]
+    padded = np.zeros((3, s), np.int32)
+    for i, p in enumerate(prompts):
+        padded[i, s - len(p):] = p
+    lg, caches, _ = prefill(params, cfg, jnp.asarray(padded),
+                            cache_slots=s + 5,
+                            lengths=jnp.asarray(lens, jnp.int32))
+    for i, p in enumerate(prompts):
+        solo_lg, _, _ = prefill(params, cfg, jnp.asarray([p]),
+                                cache_slots=len(p))
+        np.testing.assert_array_equal(np.asarray(lg)[i],
+                                      np.asarray(solo_lg)[0], err_msg=str(i))
+    # decode continuation: per-row offsets place new tokens at the uniform
+    # slot frontier while logical positions stay per-row
+    offsets = np.asarray(caches["layers"].offset)
+    assert (offsets == np.asarray([s - n for n in lens])[None, :]).all()
+    tok0 = jnp.argmax(lg, -1).astype(jnp.int32)
+    toks, _, _ = decode_many(params, cfg, tok0, caches, num_steps=4)
+    for i, p in enumerate(prompts):
+        solo_lg, sc, _ = prefill(params, cfg, jnp.asarray([p]),
+                                 cache_slots=len(p) + 4)
+        st, _, _ = decode_many(params, cfg,
+                               jnp.argmax(solo_lg, -1).astype(jnp.int32),
+                               sc, num_steps=4)
+        np.testing.assert_array_equal(np.asarray(toks)[:, i],
+                                      np.asarray(st)[:, 0], err_msg=str(i))
+
+
+def test_static_batch_handles_ragged_prompts(moe_setup):
+    """The lockstep baseline no longer demands equal-length prompts."""
+    cfg, params = moe_setup
+    eng = DyMoEEngine(cfg, params, EngineConfig(decode_chunk=4))
+    rng = np.random.default_rng(13)
+    reqs = _ragged_requests(rng, [(10, 6, None), (6, 4, None), (8, 8, None)])
+    out = eng.generate_batch(reqs, static=True)
+    assert [len(r.tokens) for r in out] == [6, 4, 8]
+    assert np.isnan(out[0].ttft_s)  # baseline: telemetry discarded
+
+
+# ----------------------------------------------------- dense-arch slots
+
+
+def test_scheduler_serves_dense_arch():
+    cfg = ModelConfig(
+        name="d", arch_type="dense", num_layers=2, d_model=64,
+        vocab_size=256, num_heads=4, num_kv_heads=2, head_dim=16, d_ff=128,
+        dtype="float32", remat="none")
+    params = init_params(cfg, jax.random.PRNGKey(1))
+    eng = DyMoEEngine(cfg, params, EngineConfig(decode_chunk=2))
+    reqs = [Request(prompt_tokens=[1, 2, 3, 4], max_new_tokens=4),
+            Request(prompt_tokens=[5, 6, 7], max_new_tokens=6)]
+    out = eng.generate_batch(reqs, num_slots=1)
+    for req, res in zip(reqs, out):
+        assert res.tokens == eng.generate(req).tokens
+        assert np.isfinite(res.ttft_s) and np.isfinite(res.tpot_s)
+        assert res.cache_stats is None  # no orchestrator on dense archs
