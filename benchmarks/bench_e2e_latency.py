@@ -211,32 +211,47 @@ def measured_decode_throughput(max_new: int = 65, smoke: bool = False
 
 
 # the continuous-vs-static serving comparison runs the paper's flagship
-# "4/0" deployment (sub-critical experts skipped outright) at a size where
-# per-step compute actually scales with batch width — the regime where a
-# lockstep batch pays for its drained rows. 4/2 would work too but doubles
-# the dual-buffer path's dequant traffic, muddying the scheduling signal.
+# "4/0" deployment (sub-critical experts skipped outright). 12 layers x
+# 16 experts at a small width is deliberately the SCHEDULING regime: the
+# per-chunk host work (telemetry fetch + per-row orchestrator replay +
+# boundary bookkeeping, ~10-25% of the serial wall here) is large relative
+# to the per-chunk device compute, so both effects under test are visible
+# — lockstep batching burning device steps on drained rows, and the
+# serial loop paying the whole host replay between dispatches. 4/2 would
+# work too but doubles the dual-buffer path's dequant traffic, muddying
+# the scheduling signal.
 BENCH_MOE = dataclasses.replace(
-    TINY_MOE, name="bench-moe", d_model=128, head_dim=32, moe_d_ff=256,
-    vocab_size=512,
+    TINY_MOE, name="bench-moe", vocab_size=512, num_layers=12,
+    num_experts=16, num_experts_per_tok=2, moe_d_ff=128,
     dymoe=dataclasses.replace(TINY_MOE.dymoe, low_bits=0))
 
 
 def continuous_vs_static_batching(smoke: bool = False) -> List[dict]:
     """Ragged-workload serving throughput: the continuous-batching
-    scheduler (fixed slot set, admission/eviction at chunk boundaries,
-    per-request modeled TTFT/TPOT) against the static lockstep
+    scheduler — PIPELINED (host telemetry replay overlapped with device
+    decode, batched admission waves) and SERIAL (``pipeline=False``, host
+    replay on the critical path) — against the static lockstep
     ``generate_batch`` baseline (whole batch locked until the last row
     drains, right-aligned padding, NaN telemetry).
 
     The workload is deliberately ragged — bucketed prompt lengths (so the
-    solo-prefill admission path compiles a handful of shapes, as a real
-    server would bucket) and heavily mixed ``max_new_tokens`` with two
-    long stragglers over many short requests — the regime where lockstep
-    batching burns device steps on drained rows while the scheduler keeps
-    only ``num_slots`` rows hot. ``--smoke`` asserts the scheduler's
-    acceptance contract: per-request finite modeled latencies, per-row
-    tokens bit-identical to solo `generate`, and higher decode throughput
-    than the static baseline."""
+    admission waves compile a handful of shapes, as a real server would
+    bucket) and heavily mixed ``max_new_tokens`` with two long stragglers
+    over many short requests — the regime where lockstep batching burns
+    device steps on drained rows while the scheduler keeps only
+    ``num_slots`` rows hot, and where the serial loop pays the whole
+    orchestrator replay between chunks. The ``pipelined_vs_serial``
+    speedup is the ROADMAP "async host telemetry replay" win: chunk N+1
+    is dispatched before chunk N's telemetry is even fetched.
+
+    ``--smoke`` asserts the acceptance contract: per-request finite
+    modeled latencies, per-row tokens bit-identical to solo `generate`,
+    pipelined results bit-identical to serial (tokens AND modeled
+    TTFT/TPOT — always), throughput at least the static baseline's, and a
+    pipelined-over-serial speedup — the latter only on >2-core runners,
+    where there is a core for the replay thread to overlap onto."""
+    import os
+
     rng = np.random.default_rng(0)
     specs = [(16, 64), (24, 64)] + [
         (int(rng.choice([8, 16, 24])), int(rng.integers(3, 7)))
@@ -247,53 +262,87 @@ def continuous_vs_static_batching(smoke: bool = False) -> List[dict]:
     params = init_params(BENCH_MOE, jax.random.PRNGKey(0))
     eng = DyMoEEngine(BENCH_MOE, params, EngineConfig(decode_chunk=8))
     num_slots = 4
-    # warm-up: compile prefill buckets, the slot-batched decode, and the
-    # static path's padded prefill + lockstep decode
-    eng.generate_batch(requests, num_slots=num_slots)
-    eng.generate_batch(requests, static=True)
+
+    def serve(mode):
+        if mode == "static":
+            return eng.generate_batch(requests, static=True)
+        return eng.generate_batch(requests, num_slots=num_slots,
+                                  pipeline=(mode == "pipelined"))
+
+    modes = ("pipelined", "serial", "static")
+    for mode in modes:   # warm-up: compile every shape either path needs
+        serve(mode)
     repeats = 3
-    wall = {}
-    outs = {}
-    for mode in ("continuous", "static"):
+    wall, outs = {}, {}
+    for mode in modes:
         best = float("inf")
         for _ in range(repeats):
             t0 = time.perf_counter()
-            out = eng.generate_batch(
-                requests, num_slots=num_slots) if mode == "continuous" \
-                else eng.generate_batch(requests, static=True)
+            out = serve(mode)
             best = min(best, time.perf_counter() - t0)
         wall[mode], outs[mode] = best, out
     new_tokens = {m: sum(len(r.tokens) for r in o) for m, o in outs.items()}
     tok_s = {m: new_tokens[m] / wall[m] for m in wall}
-    speedup = tok_s["continuous"] / tok_s["static"]
-    cont = outs["continuous"]
-    finite = all(np.isfinite(r.ttft_s) and np.isfinite(r.tpot_s)
-                 for r in cont)
+    speedup_static = tok_s["pipelined"] / tok_s["static"]
+    speedup_serial = tok_s["pipelined"] / tok_s["serial"]
+    cont = outs["pipelined"]
+    finite_by_mode = {   # static is honestly False: NaN modeled by design
+        m: all(np.isfinite(r.ttft_s) and np.isfinite(r.tpot_s) for r in o)
+        for m, o in outs.items()}
+    finite = finite_by_mode["pipelined"]
     # solo parity spot-check: a straggler + a short request
     parity = all(eng.generate(requests[i]).tokens == cont[i].tokens
                  for i in (0, 2))
+    # pipeline parity: bit-identical tokens AND modeled numbers
+    pipe_parity = all(
+        a.tokens == b.tokens and a.ttft_s == b.ttft_s
+        and a.tpot_s == b.tpot_s and a.cache_stats == b.cache_stats
+        for a, b in zip(cont, outs["serial"]))
     rows = []
-    for mode in ("continuous", "static"):
+    for mode in modes:
+        sched = mode != "static"
+        res = outs[mode]
         rows.append(dict(
             bench="continuous_vs_static", arch=BENCH_MOE.name, mode=mode,
             num_requests=len(requests),
-            num_slots=num_slots if mode == "continuous" else len(requests),
+            num_slots=num_slots if sched else len(requests),
             new_tokens=new_tokens[mode],
             decode_tok_s=round(tok_s[mode], 1),
-            speedup_vs_static=round(speedup, 2)
-            if mode == "continuous" else 1.0,
-            per_request_latency_finite=finite
-            if mode == "continuous" else False,
-            mean_ttft_s=round(float(np.mean([r.ttft_s for r in cont])), 6)
-            if mode == "continuous" else None,
-            mean_tpot_s=round(float(np.mean([r.tpot_s for r in cont])), 7)
-            if mode == "continuous" else None,
-            solo_parity=parity if mode == "continuous" else None))
+            speedup_vs_static=(round(tok_s[mode] / tok_s["static"], 2)
+                               if sched else 1.0),
+            pipelined_vs_serial=(round(speedup_serial, 2)
+                                 if mode == "pipelined" else None),
+            per_request_latency_finite=finite_by_mode[mode],
+            mean_ttft_s=round(float(np.mean([r.ttft_s for r in res])), 6)
+            if sched else None,
+            mean_tpot_s=round(float(np.mean([r.tpot_s for r in res])), 7)
+            if sched else None,
+            mean_queue_wait_s=round(float(np.mean(
+                [r.queue_wait_s for r in res])), 4) if sched else None,
+            solo_parity=parity if mode == "pipelined" else None,
+            pipelined_parity=pipe_parity if mode == "pipelined" else None))
     if smoke:
-        assert finite, "scheduler produced non-finite modeled TTFT/TPOT"
+        assert finite_by_mode["pipelined"] and finite_by_mode["serial"], \
+            "scheduler produced non-finite modeled TTFT/TPOT"
         assert parity, "continuous batching changed a request's tokens"
-        assert speedup >= 1.0, \
-            f"continuous batching slower than static lockstep: {speedup:.2f}x"
+        assert pipe_parity, ("pipelined scheduler diverged from the serial "
+                             "reference in tokens or modeled numbers")
+        assert speedup_static >= 1.0, \
+            f"continuous batching slower than static lockstep: " \
+            f"{speedup_static:.2f}x"
+        # the overlap win needs a spare core for the replay thread; on
+        # <=2-core CI runners assert parity only. sched_getaffinity sees
+        # cgroup/affinity limits that os.cpu_count() (host cores) misses.
+        # threshold 1.0 (throughput parity), not the measured 1.05-1.15x:
+        # the guard catches the pipeline REGRESSING below the serial loop
+        # without flaking on a noisy-neighbor runner at the low end
+        try:
+            n_cores = len(os.sched_getaffinity(0))
+        except AttributeError:  # non-Linux
+            n_cores = os.cpu_count() or 1
+        if n_cores > 2:
+            assert speedup_serial >= 1.0, \
+                f"pipelined replay overlap regressed: {speedup_serial:.2f}x"
     return rows
 
 
@@ -325,10 +374,25 @@ def run(smoke: bool = False) -> List[dict]:
 
 if __name__ == "__main__":
     import argparse
+    import json
+    import os
     ap = argparse.ArgumentParser()
     ap.add_argument("--smoke", action="store_true",
                     help="tiny config / few tokens; assert chunked-decode "
                          "parity and speedup (CI regression guard)")
+    ap.add_argument("--json", action="store_true",
+                    help="write BENCH_e2e.json (machine-readable per-row "
+                         "tok/s, speedups, modeled TTFT/TPOT) so the perf "
+                         "trajectory is tracked across PRs")
     args = ap.parse_args()
-    for r in run(smoke=args.smoke):
+    rows = run(smoke=args.smoke)
+    for r in rows:
         print(r)
+    if args.json:
+        payload = dict(
+            bench="bench_e2e_latency", smoke=args.smoke,
+            backend=jax.default_backend(), cpu_count=os.cpu_count(),
+            rows=rows)
+        with open("BENCH_e2e.json", "w") as f:
+            json.dump(payload, f, indent=2, default=float)
+        print(f"# wrote BENCH_e2e.json ({len(rows)} rows)")

@@ -19,6 +19,7 @@ import jax.numpy as jnp
 __all__ = [
     "heavy_hitter_mask",
     "prefill_expert_importance",
+    "prefill_expert_importance_rows",
     "decode_expert_importance",
     "select_critical",
     "select_critical_rows",
@@ -47,6 +48,18 @@ def prefill_expert_importance(expert_hh_load: jnp.ndarray,
     different criterion)."""
     total = jnp.maximum(expert_load.sum(), 1.0)
     return expert_hh_load + expert_load / (total + 1.0)
+
+
+def prefill_expert_importance_rows(expert_hh_load: jnp.ndarray,
+                                   expert_load: jnp.ndarray,
+                                   ) -> jnp.ndarray:
+    """Per-row Eq. (2): (B, E) heavy-hitter / total loads -> (B, E)
+    importance, each row normalized by ITS OWN total load. Both loads are
+    integer-valued counts (exactly representable in f32), so a row's
+    importance is bit-identical to :func:`prefill_expert_importance` on
+    that row served alone — the contract that lets a batched ragged
+    admission prefill pick every request's Critical sets row-locally."""
+    return jax.vmap(prefill_expert_importance)(expert_hh_load, expert_load)
 
 
 def decode_expert_importance(gate_scores: jnp.ndarray) -> jnp.ndarray:

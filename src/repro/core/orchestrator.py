@@ -27,10 +27,21 @@ outright under "4/0" (the 0-bit state — no I/O, no compute).
 This module is deliberately framework-free (plain Python + numpy inputs) so
 it can be driven either by the real JAX serving engine (routing info from the
 jitted forward) or by the benchmark harness in simulation.
+
+**Replay-ordering contract.** ``step`` / ``step_batch`` advance a modeled
+clock, a DMA tail and a shared LRU cache, so the ORDER of replay calls IS
+the modeled timeline: callers must replay telemetry in the same order the
+modeled device would have executed it (the serving engine funnels every
+replay — admissions and decode chunks alike — through one FIFO
+:class:`repro.serving.engine.ReplayStream`). Replaying from two threads
+concurrently would silently interleave the clock and the cache's
+recency order; both entry points carry a cheap reentrancy guard that
+fails loudly instead.
 """
 from __future__ import annotations
 
 import dataclasses
+import threading
 from typing import List, Optional, Sequence
 
 import numpy as np
@@ -106,8 +117,22 @@ class DynamicExpertOrchestrator:
         # prefetch whose arrival has not yet been observed by a demand
         # request (the fix for write-only _dma_tail / instant admission)
         self._pending_prefetch: dict = {}
+        # reentrancy guard (see module docstring): a Lock, not a flag, so
+        # two threads racing the check cannot both slip past it
+        self._replay_lock = threading.Lock()
 
     # ------------------------------------------------------------------
+    def _enter_replay(self) -> None:
+        if not self._replay_lock.acquire(blocking=False):
+            raise RuntimeError(
+                "DynamicExpertOrchestrator: concurrent replay detected — "
+                "the modeled clock/cache require replays to be serialized "
+                "in timeline order (route them through one FIFO "
+                "ReplayStream)")
+
+    def _exit_replay(self) -> None:
+        self._replay_lock.release()
+
     def _bytes(self, precision: str) -> int:
         return (self.cfg.bytes_high if precision == "high"
                 else self.cfg.bytes_low)
@@ -238,6 +263,15 @@ class DynamicExpertOrchestrator:
         Eq. (6–8) (None disables prefetch).
         compute_s_per_layer: modeled compute window per layer.
         """
+        self._enter_replay()
+        try:
+            return self._step(critical_masks, active_masks, predicted_next,
+                              compute_s_per_layer)
+        finally:
+            self._exit_replay()
+
+    def _step(self, critical_masks, active_masks, predicted_next,
+              compute_s_per_layer) -> StepTiming:
         cfg = self.cfg
         timings: List[LayerTiming] = []
         for l in range(cfg.num_layers):
@@ -304,6 +338,15 @@ class DynamicExpertOrchestrator:
         (T, L, E) float or None (disables prefetch); compute_s: (T, L)
         modeled compute windows. Returns one StepTiming per step.
         """
+        self._enter_replay()
+        try:
+            return self._step_batch(critical_masks, active_masks,
+                                    predicted_next, compute_s)
+        finally:
+            self._exit_replay()
+
+    def _step_batch(self, critical_masks, active_masks, predicted_next,
+                    compute_s) -> List[StepTiming]:
         cfg = self.cfg
         crit = np.asarray(critical_masks, bool)
         active = np.asarray(active_masks, bool)

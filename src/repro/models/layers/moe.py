@@ -34,8 +34,9 @@ from repro.models.config import ModelConfig
 from repro.quant.mixed import mixed_precision_matmul
 from repro.quant.qtensor import MixedPrecisionWeights
 
-__all__ = ["init_moe", "moe_apply", "moe_apply_rows", "moe_apply_sharded",
-           "quantize_moe", "MoEStats"]
+__all__ = ["init_moe", "moe_apply", "moe_apply_rows",
+           "moe_apply_prefill_rows", "moe_apply_sharded", "quantize_moe",
+           "MoEStats"]
 
 
 @jax.tree_util.register_dataclass
@@ -104,6 +105,29 @@ def _expert_ffn(w_gate, w_up, w_down, xb: jnp.ndarray) -> jnp.ndarray:
     h = jax.nn.silu(jnp.einsum("ecd,edf->ecf", xb, w_gate))
     h = h * jnp.einsum("ecd,edf->ecf", xb, w_up)
     return jnp.einsum("ecf,efd->ecd", h, w_down)
+
+
+def _expert_ffn_fixed(qweights: dict, prec: str, xb: jnp.ndarray
+                      ) -> jnp.ndarray:
+    """SwiGLU with EVERY expert at one fixed precision (``prec`` ∈
+    {"high", "low"}) — branch-free grouped streaming; the capacity buffer
+    already encodes the per-token precision selection. Shared by both
+    dual-buffer dispatches (decode rows and prefill rows)."""
+    from repro.kernels.quant_matmul.ops import expert_quant_matmul_fixed
+
+    def mm(name, h):
+        return expert_quant_matmul_fixed(h, getattr(qweights[name], prec),
+                                         out_dtype=xb.dtype)
+
+    h = jax.nn.silu(mm("w_gate", xb)) * mm("w_up", xb)
+    return mm("w_down", h)
+
+
+def _shared_experts(p, x: jnp.ndarray) -> jnp.ndarray:
+    """Always-active shared experts (Qwen2-MoE): (T, dm) -> (T, dm)."""
+    hs = jax.nn.silu(jnp.einsum("td,edf->etf", x, p["shared_w_gate"]))
+    hs = hs * jnp.einsum("td,edf->etf", x, p["shared_w_up"])
+    return jnp.einsum("etf,efd->td", hs, p["shared_w_down"])
 
 
 def _expert_ffn_quantized(qw: dict, critical: jnp.ndarray, xb: jnp.ndarray
@@ -178,9 +202,7 @@ def moe_apply(p, cfg: ModelConfig, x: jnp.ndarray, *,
     y = ye.reshape(t, k, dm).sum(axis=1)
 
     if cfg.num_shared_experts:
-        hs = jax.nn.silu(jnp.einsum("td,edf->etf", x, p["shared_w_gate"]))
-        hs = hs * jnp.einsum("td,edf->etf", x, p["shared_w_up"])
-        y = y + jnp.einsum("etf,efd->td", hs, p["shared_w_down"])
+        y = y + _shared_experts(p, x)
 
     # ----- statistics / losses (over valid tokens only) -----
     onehot_top = jax.nn.one_hot(idx, e, dtype=jnp.float32)   # (T, k, E)
@@ -268,35 +290,21 @@ def moe_apply_rows(p, cfg: ModelConfig, x: jnp.ndarray,
             xb.astype(x.dtype), mode="drop")
         return buf, slot
 
-    def ffn_fixed(prec: str, xb):
-        """SwiGLU with every expert at one fixed precision — branch-free
-        grouped streaming (the buffer already encodes the selection)."""
-        from repro.kernels.quant_matmul.ops import expert_quant_matmul_fixed
-
-        def mm(name, h):
-            return expert_quant_matmul_fixed(h, getattr(qweights[name],
-                                                        prec),
-                                             out_dtype=xb.dtype)
-        h = jax.nn.silu(mm("w_gate", xb)) * mm("w_up", xb)
-        return mm("w_down", h)
-
     buf_hi, slot_hi = dispatch(flat_c)
-    y_hi = ffn_fixed("high", buf_hi)
+    y_hi = _expert_ffn_fixed(qweights, "high", buf_hi)
     skip_low = qweights["w_gate"].low is None            # "4/0"
     if skip_low:
         ye = jnp.where(flat_c[:, None], y_hi[flat_e, slot_hi], 0.0)
     else:
         buf_lo, slot_lo = dispatch(~flat_c)
-        y_lo = ffn_fixed("low", buf_lo)
+        y_lo = _expert_ffn_fixed(qweights, "low", buf_lo)
         ye = jnp.where(flat_c[:, None], y_hi[flat_e, slot_hi],
                        y_lo[flat_e, slot_lo])
     ye = ye * gates.reshape(-1, 1).astype(x.dtype)
     y = ye.reshape(b, k, dm).sum(axis=1)
 
     if cfg.num_shared_experts:
-        hs = jax.nn.silu(jnp.einsum("td,edf->etf", x, p["shared_w_gate"]))
-        hs = hs * jnp.einsum("td,edf->etf", x, p["shared_w_up"])
-        y = y + jnp.einsum("etf,efd->td", hs, p["shared_w_down"])
+        y = y + _shared_experts(p, x)
 
     onehot_top = jax.nn.one_hot(idx, e, dtype=jnp.float32)    # (B, k, E)
     load = onehot_top.sum(axis=1)                             # (B, E)
@@ -305,6 +313,156 @@ def moe_apply_rows(p, cfg: ModelConfig, x: jnp.ndarray,
     stats = dict(active=load > 0,
                  gate_mean=gate_sum / jnp.maximum(load, 1.0),
                  router_logits=logits)
+    return y, stats
+
+
+def moe_apply_prefill_rows(p, cfg: ModelConfig, x: jnp.ndarray,
+                           critical_rows: jnp.ndarray, qweights: dict, *,
+                           rows: int,
+                           hh_mask: Optional[jnp.ndarray] = None,
+                           token_valid: Optional[jnp.ndarray] = None,
+                           row_capacities: Optional[jnp.ndarray] = None,
+                           ) -> Tuple[jnp.ndarray, dict]:
+    """Prefill-shaped MoE where every ROW carries its own Critical mask —
+    :func:`moe_apply_rows`' dual-buffer trick at prefill shapes.
+
+    A batched admission prefill must not couple its rows: with one shared
+    Critical set, request A's importance profile would pick request B's
+    expert precisions and B's tokens would stop matching its solo prefill.
+    Instead each token inherits its ROW's (rows, E) mask and is dispatched
+    into one of TWO per-row capacity regions per expert — a high-precision
+    buffer and a low-precision one — and each buffer runs ONE grouped
+    fixed-precision quant-matmul (``expert_quant_matmul_fixed``), so
+    weights still unpack once per precision stream regardless of how many
+    admissions share the batch.
+
+    Solo-parity details the scheduler's admission path relies on:
+      * capacity is enforced PER ROW at the row's own solo budget
+        ``_capacity(cfg, len_i)`` (``len_i`` = the row's valid-token
+        count), with within-row slot order equal to the solo cumsum order,
+        so a token is dropped here iff the solo prefill drops it;
+      * tokens of a padded (``token_valid`` False) position take no slot
+        and produce exact zeros;
+      * under "4/0" (``low is None``) the low buffer is never built — no
+        I/O, exact zeros — matching the solo kernel's in-kernel zeroing of
+        sub-critical experts.
+
+    x: (T, dm) tokens flattened from (rows, S) row-major; critical_rows:
+    (rows, E) bool; hh_mask/token_valid: (T,). ``row_capacities`` (rows,)
+    overrides the in-graph capacity computation with host-computed
+    ``_capacity(cfg, len_i)`` values — the in-graph fallback runs the
+    formula in f32, whose truncation can differ from the host's f64 by
+    one slot for some (capacity_factor, length) pairs, so callers that
+    know the row lengths (the scheduler's admission path) pass the exact
+    values. Returns (y (T, dm), per-row stats:
+    {"active"/"load"/"hh_load"/"gate_mean" (rows, E),
+    "router_logits" (T, E), "aux_loss", "dropped_frac" scalars}).
+    """
+    t, dm = x.shape
+    b = rows
+    assert t % b == 0, (t, b)
+    s = t // b
+    e, k = cfg.num_experts, cfg.num_experts_per_tok
+    cmax = _capacity(cfg, s)      # static per-row buffer stride (>= c_row)
+
+    logits = x.astype(jnp.float32) @ p["wg_router"]      # (T, E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gates, idx = jax.lax.top_k(probs, k)                 # (T, k)
+    gates = gates / jnp.maximum(gates.sum(-1, keepdims=True), 1e-9)
+
+    flat_e = idx.reshape(-1)                             # (T*k,)
+    row_rep = jnp.repeat(jnp.arange(b), s * k)           # (T*k,) token's row
+    crit_tok = jnp.take_along_axis(
+        critical_rows.astype(bool)[jnp.repeat(jnp.arange(b), s)], idx,
+        axis=1)                                          # (T, k)
+    flat_c = crit_tok.reshape(-1)
+    if token_valid is not None:
+        valid_rep = jnp.repeat(token_valid.astype(bool), k)
+        lens = token_valid.astype(jnp.int32).reshape(b, s).sum(axis=1)
+    else:
+        valid_rep = jnp.ones((t * k,), bool)
+        lens = jnp.full((b,), s, jnp.int32)
+    # per-row solo capacity: same formula as _capacity at the row's own
+    # valid length, so batched drop behavior reproduces the solo prefill's
+    if row_capacities is not None:
+        c_row = jnp.asarray(row_capacities, jnp.int32)   # (B,) exact
+    else:
+        c_row = jnp.minimum(lens, jnp.maximum(8, (
+            jnp.float32(cfg.capacity_factor) * lens.astype(jnp.float32)
+            * k / e).astype(jnp.int32)))                 # (B,)
+    oh = jax.nn.one_hot(flat_e, e, dtype=jnp.int32)      # (T*k, E)
+    tok_of = jnp.repeat(jnp.arange(t), k)
+
+    def stream_pos(select):
+        """Within-ROW running slot index of each (token, k) pair inside the
+        ``select``-ed stream (cumsum resets at row boundaries — the solo
+        order), and the keep mask at the row's solo capacity."""
+        ohs = oh * select[:, None].astype(oh.dtype)
+        pos = jnp.cumsum(ohs.reshape(b, s * k, e), axis=1
+                         ).reshape(t * k, e) - 1
+        pos_in_e = jnp.take_along_axis(pos, flat_e[:, None], axis=1)[:, 0]
+        keep = select & (pos_in_e < c_row[row_rep])
+        return pos_in_e, keep
+
+    def dispatch(select):
+        pos_in_e, keep = stream_pos(select)
+        slot = row_rep * cmax + jnp.clip(pos_in_e, 0, cmax - 1)
+        xb = jnp.where(keep[:, None], x[tok_of], 0)
+        buf = jnp.zeros((e, b * cmax, dm), x.dtype).at[flat_e, slot].add(
+            xb.astype(x.dtype), mode="drop")
+        return buf, slot, keep
+
+    sel_hi = flat_c & valid_rep
+    sel_lo = ~flat_c & valid_rep
+    buf_hi, slot_hi, keep_hi = dispatch(sel_hi)
+    y_hi = _expert_ffn_fixed(qweights, "high", buf_hi)
+    ye_hi = jnp.where(keep_hi[:, None], y_hi[flat_e, slot_hi], 0.0)
+    skip_low = qweights["w_gate"].low is None            # "4/0"
+    if skip_low:
+        ye = ye_hi
+        _, keep_lo = stream_pos(sel_lo)  # stats only: solo counts these
+    else:
+        buf_lo, slot_lo, keep_lo = dispatch(sel_lo)
+        y_lo = _expert_ffn_fixed(qweights, "low", buf_lo)
+        ye = jnp.where(flat_c[:, None], ye_hi,
+                       jnp.where(keep_lo[:, None], y_lo[flat_e, slot_lo],
+                                 0.0))
+    ye = ye * gates.reshape(-1, 1).astype(x.dtype)
+    y = ye.reshape(t, k, dm).sum(axis=1)
+
+    if cfg.num_shared_experts:
+        y = y + _shared_experts(p, x)
+
+    # ----- per-row statistics (each row's block == its solo stats) -----
+    onehot_top = jax.nn.one_hot(idx, e, dtype=jnp.float32)   # (T, k, E)
+    if token_valid is not None:
+        tv = token_valid.astype(jnp.float32)
+        onehot_top = onehot_top * tv[:, None, None]
+        n_valid = jnp.maximum(tv.sum(), 1.0)
+        frac_probs = jnp.einsum("te,t->e", probs, tv) / n_valid
+        z_loss = jnp.sum(jax.nn.logsumexp(logits, axis=-1) ** 2 * tv) \
+            / n_valid
+    else:
+        frac_probs = probs.mean(axis=0)
+        z_loss = jnp.mean(jax.nn.logsumexp(logits, axis=-1) ** 2)
+    kept = keep_hi | keep_lo
+    dropped = 1.0 - kept.sum() / jnp.maximum(valid_rep.sum(), 1)
+    oh_r = onehot_top.reshape(b, s, k, e)
+    load = oh_r.sum(axis=(1, 2))                             # (B, E)
+    if hh_mask is None:
+        hh_mask = jnp.zeros((t,), jnp.float32)
+    hh_load = jnp.einsum("bske,bs->be", oh_r,
+                         hh_mask.astype(jnp.float32).reshape(b, s))
+    gate_sum = jnp.einsum("bske,bsk->be", oh_r,
+                          gates.astype(jnp.float32).reshape(b, s, k))
+    gate_mean = gate_sum / jnp.maximum(load, 1.0)
+    load_all = load.sum(axis=0)
+    frac_tokens = load_all / jnp.maximum(load_all.sum(), 1.0)
+    lb_loss = e * jnp.sum(frac_tokens * frac_probs)
+    aux = cfg.router_aux_coef * lb_loss + cfg.router_z_coef * z_loss
+    stats = dict(active=load > 0, load=load, hh_load=hh_load,
+                 gate_mean=gate_mean, router_logits=logits,
+                 aux_loss=aux, dropped_frac=dropped)
     return y, stats
 
 

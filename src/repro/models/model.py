@@ -35,7 +35,8 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.importance import heavy_hitter_mask, \
-    prefill_expert_importance, select_critical, select_critical_rows
+    prefill_expert_importance, prefill_expert_importance_rows, \
+    select_critical, select_critical_rows
 from repro.core.prefetch import predict_next_gates, prefetch_targets
 from repro.core.schedule import critical_counts, retention_ratio
 from repro.models.config import ModelConfig
@@ -43,8 +44,8 @@ from repro.models.kv_cache import KVCache, fill_kv_cache, init_kv_cache
 from repro.models.layers.attention import attention_decode, attention_train, \
     init_attention
 from repro.models.layers.mlp import init_mlp, mlp, mlp_quantized, quantize_mlp
-from repro.models.layers.moe import init_moe, moe_apply_rows, \
-    moe_apply_sharded, quantize_moe
+from repro.models.layers.moe import init_moe, moe_apply_prefill_rows, \
+    moe_apply_rows, moe_apply_sharded, quantize_moe
 from repro.models.layers.norms import init_rmsnorm, rmsnorm
 from repro.models.layers.rotary import sinusoidal_embedding
 from repro.models.layers.ssm import init_mamba, init_ssm_cache, \
@@ -353,6 +354,8 @@ def prefill(params, cfg: ModelConfig, tokens: Optional[jnp.ndarray] = None,
             cache_slots: Optional[int] = None,
             full_logits: bool = False,
             lengths: Optional[jnp.ndarray] = None,
+            row_local: bool = False,
+            row_capacities: Optional[jnp.ndarray] = None,
             ) -> Tuple[jnp.ndarray, Any, DyMoEInfo]:
     """Prefill pass. DyMoE active when ``qparams`` is given and policy on.
 
@@ -365,6 +368,17 @@ def prefill(params, cfg: ModelConfig, tokens: Optional[jnp.ndarray] = None,
     logits row ``x[:, -1]`` is every row's true last token — the point of
     right alignment. Attention-based archs only (an SSM scan would thread
     pads through its recurrent state).
+
+    ``row_local`` (MoE archs; the batched-admission prefill mode): every
+    row's Critical set is selected from ITS OWN per-row importance (Eq.
+    1–2 restricted to the row's tokens) and experts execute through the
+    dual-buffer :func:`moe_apply_prefill_rows`, so a row's precisions,
+    logits and caches never depend on its batch neighbours — each row is
+    bit-identical to its solo prefill. MoE telemetry leaves come back per
+    row: ``(L, B, E)`` instead of ``(L, E)``, one block per request for
+    the orchestrator replay. No-op for non-MoE archs. ``row_capacities``
+    (B,) optionally pins each row's expert-capacity budget to the exact
+    host-computed solo value (see :func:`moe_apply_prefill_rows`).
 
     Returns (last-token logits (B, V), caches, DyMoEInfo). Caches are a
     stacked pytree: {"layers": KVCache/SSMCache with leading L,
@@ -464,43 +478,98 @@ def prefill(params, cfg: ModelConfig, tokens: Optional[jnp.ndarray] = None,
                         hh = _ragged_hh_mask(
                             tok_imp, pol.heavy_hitter_frac, lengths,
                             valid).reshape(b * s)
+                k_tok = cfg.num_experts_per_tok
+                if dymoe_on or row_local:
                     # router pre-pass: pick the Critical set BEFORE expert
                     # compute (Eq. 1-2 -> Eq. 5)
                     logits_r = hflat.astype(jnp.float32) @ lp["moe"][
                         "wg_router"]
                     probs_r = jax.nn.softmax(logits_r, axis=-1)
-                    _, idx_r = jax.lax.top_k(probs_r,
-                                             cfg.num_experts_per_tok)
+                    gates_r, idx_r = jax.lax.top_k(probs_r, k_tok)
                     oh = jax.nn.one_hot(idx_r, e, dtype=jnp.float32)
                     if vflat is not None:  # pads route nowhere
                         oh = oh * vflat.astype(jnp.float32)[:, None, None]
+                if dymoe_on and not row_local:
                     imp = prefill_expert_importance(
                         jnp.einsum("tke,t->e", oh, hh), oh.sum(axis=(0, 1)))
                     critical = select_critical(imp, xs_l["t_l"])
-                y, stats = moe_apply_sharded(
-                    lp["moe"], cfg, hflat, hh_mask=hh,
-                    critical_mask=critical,
-                    qweights=xs_l["q"]["moe"] if dymoe_on else None,
-                    token_valid=vflat)
+                if row_local:
+                    # per-ROW Critical sets (batched-admission mode): each
+                    # row's Eq. 1-2 importance over ITS OWN tokens only
+                    oh_r = oh.reshape(b, s, k_tok, e)
+                    load_rows = oh_r.sum(axis=(1, 2))          # (B, E)
+                    if dymoe_on:
+                        imp_rows = prefill_expert_importance_rows(
+                            jnp.einsum("bske,bs->be", oh_r,
+                                       hh.reshape(b, s)), load_rows)
+                        critical_rows = select_critical_rows(
+                            imp_rows, xs_l["t_l"])
+                        y, rstats = moe_apply_prefill_rows(
+                            lp["moe"], cfg, hflat, critical_rows,
+                            xs_l["q"]["moe"], rows=b, hh_mask=hh,
+                            token_valid=vflat,
+                            row_capacities=row_capacities)
+                        active_rows = rstats["active"]
+                        hh_load_rows = rstats["hh_load"]
+                        gate_mean_rows = rstats["gate_mean"]
+                        aux_t, dropped_t = (rstats["aux_loss"],
+                                            rstats["dropped_frac"])
+                    else:
+                        y, stats = moe_apply_sharded(
+                            lp["moe"], cfg, hflat, token_valid=vflat)
+                        critical_rows = jnp.ones((b, e), bool)
+                        active_rows = load_rows > 0
+                        hh_load_rows = jnp.zeros_like(load_rows)
+                        gn = gates_r / jnp.maximum(
+                            gates_r.sum(-1, keepdims=True), 1e-9)
+                        gate_mean_rows = jnp.einsum(
+                            "bske,bsk->be", oh_r,
+                            gn.reshape(b, s, k_tok)) / jnp.maximum(
+                                load_rows, 1.0)
+                        aux_t, dropped_t = stats.aux_loss, stats.dropped_frac
+                else:
+                    y, stats = moe_apply_sharded(
+                        lp["moe"], cfg, hflat, hh_mask=hh,
+                        critical_mask=critical,
+                        qweights=xs_l["q"]["moe"] if dymoe_on else None,
+                        token_valid=vflat)
                 x = x + y.reshape(b, s, -1)
                 # look-ahead (Eq. 6-7) for the next layer's prefetcher
                 pg = predict_next_gates(hflat, xs_l["next_router"])
-                _, freq = prefetch_targets(pg, cfg.num_experts_per_tok,
-                                           pol.prefetch_topk,
-                                           token_valid=vflat)
-                telem = dict(
-                    critical=(critical if critical is not None
-                              else jnp.ones((e,), bool)),
-                    active=stats.expert_load > 0,
-                    load=stats.expert_load,
-                    hh_load=stats.expert_hh_load,
-                    gate_mean=stats.gate_mean,
-                    pred=freq,
-                    aux=stats.aux_loss,
-                    dropped=stats.dropped_frac,
-                    tok_imp=(tok_imp if tok_imp is not None
-                             else jnp.zeros((b, s), jnp.float32)),
-                )
+                if row_local:
+                    # per-row Eq. 7: each admission's own predicted demand
+                    pg_r = pg.reshape(b, s, e)
+                    if valid is None:
+                        freq = jax.vmap(lambda g: prefetch_targets(
+                            g, k_tok, pol.prefetch_topk)[1])(pg_r)
+                    else:
+                        freq = jax.vmap(lambda g, v: prefetch_targets(
+                            g, k_tok, pol.prefetch_topk,
+                            token_valid=v)[1])(pg_r, valid)
+                    telem = dict(
+                        critical=critical_rows, active=active_rows,
+                        load=load_rows, hh_load=hh_load_rows,
+                        gate_mean=gate_mean_rows, pred=freq, aux=aux_t,
+                        dropped=dropped_t,
+                        tok_imp=(tok_imp if tok_imp is not None
+                                 else jnp.zeros((b, s), jnp.float32)))
+                else:
+                    _, freq = prefetch_targets(pg, k_tok,
+                                               pol.prefetch_topk,
+                                               token_valid=vflat)
+                    telem = dict(
+                        critical=(critical if critical is not None
+                                  else jnp.ones((e,), bool)),
+                        active=stats.expert_load > 0,
+                        load=stats.expert_load,
+                        hh_load=stats.expert_hh_load,
+                        gate_mean=stats.gate_mean,
+                        pred=freq,
+                        aux=stats.aux_loss,
+                        dropped=stats.dropped_frac,
+                        tok_imp=(tok_imp if tok_imp is not None
+                                 else jnp.zeros((b, s), jnp.float32)),
+                    )
         else:  # ssm
             h = rmsnorm(lp["norm1"], x, cfg.norm_eps)
             sp = lp["ssm"]

@@ -1,10 +1,11 @@
 from repro.serving.cost_model import EdgeProfile, EdgeCostModel
-from repro.serving.engine import DyMoEEngine, EngineConfig, GenerationResult
+from repro.serving.engine import DyMoEEngine, EngineConfig, \
+    GenerationResult, ReplayStream
 from repro.serving.sampler import sample_token
 from repro.serving.request import Request
 from repro.serving.scheduler import ContinuousBatchingScheduler, \
     SchedulerConfig
 
 __all__ = ["EdgeProfile", "EdgeCostModel", "DyMoEEngine", "EngineConfig",
-           "GenerationResult", "sample_token", "Request",
+           "GenerationResult", "ReplayStream", "sample_token", "Request",
            "ContinuousBatchingScheduler", "SchedulerConfig"]

@@ -41,10 +41,12 @@ dyquant / 4-2 vs 4-0), matching paper Table 3 rows 1–6.
 from __future__ import annotations
 
 import dataclasses
+import queue as _queue
+import threading
 import time
 import warnings
 from functools import partial
-from typing import Dict, List, Optional, Sequence, Tuple
+from typing import Callable, Dict, List, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -62,7 +64,92 @@ from repro.serving.cost_model import EdgeCostModel, EdgeProfile, expert_bytes
 from repro.serving.request import Request
 from repro.serving.sampler import sample_token
 
-__all__ = ["EngineConfig", "DyMoEEngine", "GenerationResult"]
+__all__ = ["EngineConfig", "DyMoEEngine", "GenerationResult",
+           "ReplayStream"]
+
+
+class ReplayStream:
+    """FIFO stream of host-side telemetry-replay jobs.
+
+    The pipelined serving loop moves the expensive host work of a chunk —
+    the ``device_get`` of the (T, L, B, E) telemetry leaves plus the
+    per-row orchestrator replay — off the dispatch path: jobs are
+    submitted at each chunk boundary and executed by ONE worker thread in
+    submission order, while the next chunk runs on device. One worker and
+    FIFO order are load-bearing, not a simplification: the shared
+    :class:`DynamicExpertOrchestrator` advances a modeled clock and an LRU
+    cache, so replays must happen in exactly the order the serial loop
+    would perform them for the modeled TTFT/TPOT to stay bit-identical.
+
+    ``pipelined=False`` degrades to executing every job inline at
+    :meth:`submit` — the serial reference mode the parity tests compare
+    against. ``maxsize`` bounds the queue so a slow replay backpressures
+    the dispatch loop instead of accumulating unbounded device arrays.
+
+    A job that raises POISONS the stream permanently: the exception is
+    re-raised on the submitting thread at the next :meth:`submit` or
+    :meth:`drain`, every job still queued (or submitted later) is
+    skipped — the orchestrator state is no longer trustworthy — and
+    later calls keep failing with a poisoned-stream error.
+    """
+
+    _STOP = object()
+
+    def __init__(self, pipelined: bool, maxsize: int = 4):
+        self._pipelined = pipelined
+        self._exc: Optional[BaseException] = None
+        self._poisoned = False   # sticky: survives the _exc hand-off
+        if pipelined:
+            self._q: _queue.Queue = _queue.Queue(maxsize=max(1, maxsize))
+            self._thread = threading.Thread(
+                target=self._loop, name="dymoe-replay", daemon=True)
+            self._thread.start()
+
+    def _loop(self) -> None:
+        while True:
+            job = self._q.get()
+            try:
+                if job is self._STOP:
+                    return
+                if not self._poisoned:
+                    job()
+            except BaseException as e:  # noqa: BLE001 — re-raised at submit
+                self._poisoned = True
+                self._exc = e
+            finally:
+                self._q.task_done()
+
+    def submit(self, job: Callable[[], None]) -> None:
+        self._reraise()
+        if not self._pipelined:
+            try:
+                job()
+            except BaseException:
+                self._poisoned = True
+                raise
+            return
+        self._q.put(job)
+
+    def drain(self) -> None:
+        """Block until every submitted job has run (or been skipped after
+        a failure), then surface any worker exception."""
+        if self._pipelined:
+            self._q.join()
+        self._reraise()
+
+    def close(self) -> None:
+        if self._pipelined and self._thread.is_alive():
+            self._q.put(self._STOP)
+            self._thread.join()
+
+    def _reraise(self) -> None:
+        if self._exc is not None:
+            exc, self._exc = self._exc, None
+            raise exc
+        if self._poisoned:
+            raise RuntimeError(
+                "ReplayStream is poisoned by an earlier job failure; its "
+                "orchestrator state is not trustworthy")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -81,7 +168,12 @@ class GenerationResult:
     tokens: List[int]
     ttft_s: float                   # modeled edge TTFT
     tpot_s: float                   # modeled edge per-token latency
-    wall_s: float                   # actual CPU wall time (reference only)
+    # actual CPU wall time (reference only). Scheduler-served requests
+    # report SERVICE wall — admission to result — with the time spent
+    # waiting in the FIFO queue split out into queue_wait_s, so a short
+    # request admitted late no longer reports the whole run's elapsed time
+    wall_s: float
+    queue_wait_s: Optional[float] = None  # submission -> admission wait
     # wall time of the decode loop alone (clock starts once the first
     # token is sampled and on host; excludes prefill + its replay):
     decode_wall_s: Optional[float] = None
@@ -105,7 +197,8 @@ class DyMoEEngine:
                         if engine_cfg.use_dymoe else None)
         self.cost = EdgeCostModel(cfg, engine_cfg.profile)
         self._prefill = jax.jit(partial(prefill, cfg=cfg),
-                                static_argnames=("cache_slots",))
+                                static_argnames=("cache_slots",
+                                                 "row_local"))
         # num_steps sets the scan length and top_k shapes lax.top_k, so
         # they are static; temperature stays traced — serving mixed
         # per-request temperatures must not recompile the decode scan
@@ -293,7 +386,9 @@ class DyMoEEngine:
 
     def generate_batch(self, requests: Sequence[Request], rng_key=None, *,
                        num_slots: Optional[int] = None,
-                       static: bool = False) -> List[GenerationResult]:
+                       static: bool = False,
+                       pipeline: Optional[bool] = None,
+                       ) -> List[GenerationResult]:
         """Batched greedy serving (throughput path).
 
         Default: CONTINUOUS BATCHING — requests stream through a fixed
@@ -305,6 +400,12 @@ class DyMoEEngine:
         :meth:`generate`, and REAL per-request modeled TTFT/TPOT (the old
         lockstep path returned NaN).
 
+        ``pipeline`` — overlap the host telemetry replay with device
+        decode (default on; see the scheduler docstring's timeline).
+        ``pipeline=False`` is the serial reference mode: identical tokens
+        and bit-identical modeled numbers, host replay on the critical
+        path.
+
         ``static=True`` keeps the old lockstep baseline: one batch for
         the whole call, right-aligned padding for ragged prompts, decode
         until every row finishes, DyMoE telemetry discarded (NaN modeled
@@ -314,7 +415,7 @@ class DyMoEEngine:
             return self._generate_batch_static(requests)
         from repro.serving.scheduler import ContinuousBatchingScheduler
         return ContinuousBatchingScheduler(
-            self, num_slots=num_slots).run(requests)
+            self, num_slots=num_slots).run(requests, pipeline=pipeline)
 
     def _generate_batch_static(self, requests: Sequence[Request]
                                ) -> List[GenerationResult]:

@@ -1,6 +1,8 @@
 """Continuous-batching scheduler — request-level scheduling at chunk
-boundaries (ROADMAP: continuous batching; cf. D²MoE's dynamic request
-scheduling, arXiv 2504.15299).
+boundaries, with the host/device work PIPELINED (ROADMAP: async host
+telemetry replay + batched admission prefill; cf. HOBBIT's overlap of
+expert I/O with compute, arXiv 2411.01433, and D²MoE's serving loop that
+hides scheduling work behind execution, arXiv 2504.15299).
 
 The chunked decode loop (PR 2) created a natural scheduling point: between
 two fused ``decode_chunk`` device dispatches the host holds the batch
@@ -10,30 +12,62 @@ state anyway. This module owns a FIFO request queue and a fixed set of
   * **evicts** finished rows (their per-row done-mask froze them on device
     mid-chunk: token re-fed, caches pinned, telemetry zeroed — see
     :func:`repro.models.model.decode_many_batched`), finalizing their
-    per-request results;
-  * **admits** waiting requests into freed slots by running an
-    exact-shape solo prefill and injecting the resulting KV/SSM cache
-    into the slot's row of the batched cache pytree.
+    per-request results once their telemetry replay has drained;
+  * **admits** waiting requests into freed slots — ALL same-boundary
+    admissions share ONE ragged right-aligned prefill whose Critical sets
+    are row-local (:func:`repro.models.model.prefill` with
+    ``row_local=True``: per-row Eq. 1–2 importance, dual-buffer
+    hi/lo expert execution), then land in the slot batch through one
+    jitted donated multi-row scatter. One prefill dispatch + one host
+    sync per admission WAVE instead of per admission.
 
-Ragged prompt lengths need no padding on this path: each admission
-prefills at its true length into an ``S_slots``-sized cache, and decode
-reads per-row lengths/positions from the KV cache itself. (The
-right-aligned padded *batched* prefill in :func:`repro.models.model.
-prefill` serves the static lockstep baseline this scheduler is benched
-against.)
+**Pipeline timeline** (``pipeline=True``, the default)::
 
-Two properties the design buys:
+      boundary:     N                N+1              N+2
+      device   ─[ chunk N ]──────[ chunk N+1 ]────[ chunk N+2 ]─→
+                     │ sync done/emitted (B,) masks only
+      main     ──┤ evict/admit/dispatch ├──┤ evict/admit/dispatch ├──→
+                     │ submit replay job N (FIFO)
+      worker   ────[ fetch + replay N-1 ]──[ fetch + replay N ]────→
 
-  * **Per-request math parity** — admission prefill is the same B=1
-    program ``generate`` runs, and decode rows are vmapped independent
-    B=1 programs (own gate-guided Critical set per row), so every slot's
-    greedy tokens are bit-identical to serving that request alone.
-  * **Per-request system accounting** — each row's ``(T, L, E)``
-    telemetry block is replayed through the ONE shared
-    :class:`DynamicExpertOrchestrator` (requests share the device's
-    expert cache, as they would share VRAM), yielding real modeled
-    TTFT at admission and per-token latencies per request — the numbers
-    ``generate_batch`` used to return as NaN.
+  The inter-chunk data dependency stays ON DEVICE: ``toks_d[-1]`` and the
+  slot caches feed the next :func:`decode_many_batched` dispatch as
+  device arrays, so chunk N+1 launches before chunk N's telemetry has
+  even been fetched. Only the two small ``(B,)`` done/emitted masks are
+  synced at the boundary — they drive eviction/admission. The expensive
+  part — ``device_get`` of the ``(T, L, B, E)`` telemetry leaves plus the
+  per-row replay through the ONE shared
+  :class:`~repro.core.orchestrator.DynamicExpertOrchestrator` — runs on a
+  single background worker (:class:`~repro.serving.engine.ReplayStream`),
+  FIFO over chunks, so the shared cache/clock replay order is exactly the
+  serial order and the modeled TTFT/TPOT stay bit-identical to
+  ``pipeline=False``. A request's :class:`GenerationResult` is finalized
+  by the worker when its last replay drains.
+
+Ragged prompt lengths need no per-request padding on this path: an
+admission wave pads only to ITS OWN longest prompt, each row prefills at
+its true length into an ``S_slots``-sized cache (per-row offsets recorded
+in the KV cache), and decode reads per-row lengths/positions from the
+cache itself.
+
+Three properties the design buys:
+
+  * **Per-request math parity** — admission prefill rows and decode rows
+    are row-independent programs (own row-local Critical set per
+    request), so every slot's greedy tokens are bit-identical to serving
+    that request alone.
+  * **Per-request system accounting** — each row's telemetry block is
+    replayed through the ONE shared orchestrator (requests share the
+    device's expert cache, as they would share VRAM), yielding real
+    modeled TTFT at admission and per-token latencies per request.
+  * **Replay off the critical path** — the host-side modeled accounting
+    costs ~zero wall-clock when the device (or, on CPU, the XLA compute
+    threads) keeps a chunk in flight while the worker replays the
+    previous one.
+
+Per-request wall accounting: ``queue_wait_s`` is submission→admission,
+``wall_s`` is the SERVICE wall (admission→result), so a short request
+admitted late no longer reports the whole run's elapsed time.
 
 Decoding is greedy (per-request temperature falls back with a warning,
 matching the historical ``generate_batch`` contract).
@@ -52,6 +86,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.orchestrator import StepTiming
+from repro.models.kv_cache import KVCache
+from repro.models.layers.moe import _capacity
 from repro.models.model import init_decode_state
 from repro.serving.request import Request
 
@@ -62,19 +98,27 @@ __all__ = ["SchedulerConfig", "ContinuousBatchingScheduler"]
 class SchedulerConfig:
     num_slots: int = 4            # concurrent device slots (decode batch)
     max_chunks: Optional[int] = None  # safety valve; None = auto bound
+    pipeline: bool = True         # overlap host replay with device decode
+    # replay-queue bound: a slow host replay backpressures the dispatch
+    # loop instead of accumulating unbounded telemetry device arrays
+    max_inflight_chunks: int = 4
 
 
 @dataclasses.dataclass
 class _SlotState:
-    """Host-side bookkeeping for one admitted request."""
+    """Host-side bookkeeping for one admitted request. Mutated by the
+    replay stream only (after admission), read by ``finalize`` there."""
 
     index: int                    # position in the submitted request list
     request: Request
     tokens: List[int]
     prompt_len: int
-    ttft_s: float
-    prefill_timing: Optional[StepTiming]
-    prefill_weight_bytes: int
+    admit_t: float                # perf_counter at admission
+    queue_wait_s: float           # submission (run start) -> admission
+    finish_now: bool = False      # one-token request: finalize at prefill
+    ttft_s: float = 0.0           # set by the prefill replay job
+    prefill_timing: Optional[StepTiming] = None
+    prefill_weight_bytes: int = 0
     step_totals: List[float] = dataclasses.field(default_factory=list)
     decode_timings: List[StepTiming] = dataclasses.field(
         default_factory=list)
@@ -107,20 +151,62 @@ class ContinuousBatchingScheduler:
         return max(len(r.prompt_tokens) + r.max_new_tokens
                    for r in requests)
 
-    # jitted (slot index traced, batch donated): admission costs ONE fused
-    # dispatch instead of one eager scatter per cache leaf
+    def _can_batch_admissions(self) -> bool:
+        """Ragged batched admission prefill needs the right-aligned ragged
+        machinery: attention archs, no shared-attention hybrid, no ring
+        cache. Everything else admits one request per prefill (the exact
+        solo program)."""
+        cfg = self.engine.cfg
+        return (cfg.block_kinds()[0] in ("attn_dense", "attn_moe")
+                and not cfg.shared_attn_every
+                and cfg.sliding_window is None)
+
+    # jitted (row indices traced, batch donated): an admission wave costs
+    # ONE fused dispatch — every admitted row's cache pytree is scattered
+    # into its slot at once
     @staticmethod
     @partial(jax.jit, donate_argnums=0)
-    def _inject_row(batch_caches, row_caches, r):
-        """Overwrite slot ``r`` of the batched cache pytree with a freshly
-        prefilled B=1 cache (their per-layer/site leaves agree on every
-        dim except batch)."""
-        return jax.tree.map(lambda full, one: full.at[:, r].set(one[:, 0]),
-                            batch_caches, row_caches)
+    def _inject_rows(batch_caches, row_caches, src, dst):
+        """Overwrite slots ``dst`` of the batched cache pytree with rows
+        ``src`` of a freshly prefilled admission-wave cache (their
+        per-layer/site leaves agree on every dim except batch).
+
+        A ragged admission wave prefills right-aligned, so row i's KV
+        window sits at slot offset ``S_wave - s_i`` — a layout that would
+        both waste ``offset`` slots of the fixed slot budget and differ
+        from what a solo admission would have injected. Each row is
+        therefore LEFT-ALIGNED here (KV window rolled to offset 0, masked
+        slots zeroed), making the injected row bitwise identical to a
+        solo prefill of the same request — layout included."""
+        def left_align(c):
+            if not isinstance(c, KVCache):
+                return c
+
+            def roll_row(k, v, pos, off):
+                p2 = jnp.roll(pos, -off, axis=-1)          # (S,)
+                live = p2 >= 0
+                k2 = jnp.where(live[None, :, None],
+                               jnp.roll(k, -off, axis=-2), 0)
+                v2 = jnp.where(live[None, :, None],
+                               jnp.roll(v, -off, axis=-2), 0)
+                return k2, v2, p2
+
+            k, v, pos = jax.vmap(jax.vmap(roll_row))(
+                c.k, c.v, c.positions, c.offset)
+            return KVCache(k=k, v=v, positions=pos, length=c.length,
+                           offset=jnp.zeros_like(c.offset), ring=c.ring)
+
+        row_caches = jax.tree.map(
+            left_align, row_caches,
+            is_leaf=lambda x: isinstance(x, KVCache))
+        return jax.tree.map(
+            lambda full, one: full.at[:, dst].set(one[:, src]),
+            batch_caches, row_caches)
 
     # --------------------------------------------------------------- run
-    def run(self, requests: Sequence[Request]) -> List:
-        from repro.serving.engine import GenerationResult  # cycle-free
+    def run(self, requests: Sequence[Request], *,
+            pipeline: Optional[bool] = None) -> List:
+        from repro.serving.engine import GenerationResult, ReplayStream
 
         engine = self.engine
         cfg = engine.cfg
@@ -129,32 +215,37 @@ class ContinuousBatchingScheduler:
         if any(r.temperature > 0.0 for r in requests):
             warnings.warn("continuous batching decodes greedily; "
                           "per-request temperature is ignored")
+        pipeline = self.scfg.pipeline if pipeline is None else pipeline
         b = self._num_slots or min(len(requests),
                                    self.scfg.num_slots)
         b = max(1, min(b, len(requests)))
         slots_len = self._slot_budget(requests)
         chunk = engine.ecfg.decode_chunk
+        can_batch = self._can_batch_admissions()
         orch = engine._make_orchestrator()  # ONE shared cache + clock
 
         queue: Deque[Tuple[int, Request]] = deque(enumerate(requests))
         results: List[Optional[GenerationResult]] = [None] * len(requests)
         states: List[Optional[_SlotState]] = [None] * b
         caches = init_decode_state(cfg, b, slots_len)
-        tok = np.zeros(b, np.int32)
+        tok_d = jnp.zeros(b, jnp.int32)    # stays ON DEVICE between chunks
         done = np.ones(b, bool)            # empty slots stay frozen
         emitted = np.zeros(b, np.int32)
         limits = np.zeros(b, np.int32)
         eos = np.full(b, -1, np.int32)
         t0 = time.perf_counter()
+        stream = ReplayStream(pipelined=pipeline,
+                              maxsize=self.scfg.max_inflight_chunks)
 
-        def finalize(r: int) -> None:
-            st = states[r]
+        def finalize(st: _SlotState) -> None:
+            # replay-stream context: st's telemetry has fully drained
             n_dec = max(len(st.tokens) - 1, 1)
             results[st.index] = GenerationResult(
                 tokens=st.tokens,
                 ttft_s=float(st.ttft_s),
                 tpot_s=float(sum(st.step_totals) / n_dec),
-                wall_s=time.perf_counter() - t0,
+                wall_s=time.perf_counter() - st.admit_t,
+                queue_wait_s=st.queue_wait_s,
                 prefill_timing=st.prefill_timing,
                 decode_timings=st.decode_timings or None,
                 cache_stats=(dataclasses.asdict(orch.cache.stats)
@@ -164,71 +255,36 @@ class ContinuousBatchingScheduler:
                 decode_weight_bytes_per_tok=(
                     st.decode_weight_bytes / n_dec
                     if st.decode_timings else None))
-            states[r] = None
 
-        def admit(r: int) -> None:
-            nonlocal caches
-            idx, req = queue.popleft()
-            prompt = jnp.asarray(req.prompt_tokens, jnp.int32)[None, :]
-            s = prompt.shape[1]
-            logits, rcaches, info = engine._prefill(
-                engine.params, tokens=prompt, qparams=engine.qparams,
-                cache_slots=slots_len)
-            crit, act, pred = jax.device_get(
-                (info.critical_masks, info.active_masks,
-                 info.predicted_next))
-            timings, totals, wbytes = engine._replay(
-                crit, act, pred, phase="prefill",
-                s_ctx=np.asarray([s]), s_q=s, orch=orch)
-            first = int(jax.device_get(jnp.argmax(logits, axis=-1))[0])
-            states[r] = _SlotState(
-                index=idx, request=req, tokens=[first], prompt_len=s,
-                ttft_s=(timings[0].total_s if timings else totals[0]),
-                prefill_timing=timings[0] if timings else None,
-                prefill_weight_bytes=wbytes)
-            if req.max_new_tokens <= 1 or (req.eos_token is not None
-                                           and first == req.eos_token):
-                finalize(r)        # one-token request: never holds a slot
-                return
-            caches = self._inject_row(caches, rcaches, r)
-            tok[r] = first
-            done[r] = False
-            emitted[r] = 1
-            limits[r] = req.max_new_tokens
-            eos[r] = -1 if req.eos_token is None else req.eos_token
+        def replay_prefill(wave: List[_SlotState], tele, per_row: bool
+                           ) -> None:
+            """Replay one admission wave's prefill telemetry, candidate by
+            candidate in pop order (the serial admission order), and
+            finalize the one-token requests."""
+            crit, act, pred = jax.device_get(tele)
+            for i, st in enumerate(wave):
+                if crit is None:
+                    c = a = p = None
+                elif per_row:   # (L, B, E) row-local leaves -> this row
+                    c, a, p = crit[:, i], act[:, i], pred[:, i]
+                else:           # solo admission: (L, E) leaves, B == 1
+                    c, a, p = crit, act, pred
+                timings, totals, wbytes = engine._replay(
+                    c, a, p, phase="prefill",
+                    s_ctx=np.asarray([st.prompt_len]), s_q=st.prompt_len,
+                    orch=orch)
+                st.ttft_s = (timings[0].total_s if timings else totals[0])
+                st.prefill_timing = timings[0] if timings else None
+                st.prefill_weight_bytes = wbytes
+                if st.finish_now:
+                    finalize(st)
 
-        n_chunks = 0
-        max_chunks = self.scfg.max_chunks or (
-            sum(-(-max(r.max_new_tokens - 1, 0) // chunk)
-                for r in requests) + len(requests) + 1)
-        while queue or not done.all():
-            for r in range(b):        # admission at the chunk boundary
-                while queue and done[r] and states[r] is None:
-                    admit(r)
-            if done.all():
-                continue              # drained mid-admission (1-token reqs)
-            emitted_before = emitted.copy()
-            toks_d, caches, infos, done_d, emitted_d = \
-                engine._decode_batched(
-                    engine.params, tokens=jnp.asarray(tok),
-                    caches=caches, num_steps=chunk,
-                    done=jnp.asarray(done), n_emitted=jnp.asarray(emitted),
-                    limits=jnp.asarray(limits), eos_tokens=jnp.asarray(eos),
-                    qparams=engine.qparams)
-            # the chunk's ONE device->host transfer: tokens, done/emitted
-            # masks, and the three telemetry leaves the replay consumes
-            toks_np, done, emitted, crit, act, pred = jax.device_get(
-                (toks_d, done_d, emitted_d, infos.critical_masks,
-                 infos.active_masks, infos.predicted_next))
+        def replay_chunk(toks_ref, tele, rows) -> None:
+            """Fetch + replay one decode chunk's telemetry: the job the
+            pipeline overlaps with the NEXT chunk's device dispatch."""
+            toks_np, crit, act, pred = jax.device_get((toks_ref,) + tele)
             toks_np = np.asarray(toks_np)
-            done = np.array(done)          # device_get views are read-only
-            emitted = np.array(emitted)
-            tok = toks_np[-1].copy()
-            for r in range(b):
-                st = states[r]
-                if st is None:
-                    continue
-                keep = int(emitted[r] - emitted_before[r])
+            for r, st, keep, ctx0, is_done in rows:
                 if keep:   # this row's live steps are the chunk's first
                     st.tokens.extend(int(t) for t in toks_np[:keep, r])
                     # telemetry leaves are (T, L, B, E): this row's block
@@ -237,16 +293,157 @@ class ContinuousBatchingScheduler:
                         None if act is None else act[:keep, :, r],
                         None if pred is None else pred[:keep, :, r],
                         phase="decode",
-                        s_ctx=st.prompt_len + emitted_before[r]
-                        + np.arange(keep),
-                        s_q=1, orch=orch)
+                        s_ctx=ctx0 + np.arange(keep), s_q=1, orch=orch)
                     st.step_totals.extend(totals)
                     st.decode_timings.extend(timings)
                     st.decode_weight_bytes += wbytes
-                if done[r]:
-                    finalize(r)       # evict: the slot is free to admit
-            n_chunks += 1
-            assert n_chunks <= max_chunks, \
-                f"scheduler made no progress after {n_chunks} chunks"
+                if is_done:
+                    finalize(st)
+
+        def admit_boundary() -> None:
+            """Fill every free slot from the FIFO queue.
+
+            Waves: up to ``len(free)`` queued requests prefill together
+            (one ragged row-local dispatch + ONE host sync for their first
+            tokens); requests that finish at their first token free their
+            claim immediately, so further waves run until the slots are
+            full or the queue drains — the same pop sequence the
+            one-at-a-time admission loop would make. Survivors are
+            scattered into their slots with one donated injection per
+            wave."""
+            nonlocal caches, tok_d
+            free = [r for r in range(b) if done[r] and states[r] is None]
+            if not free or not queue:
+                return
+            n_survivors = 0
+            waves = []   # (rcaches, src rows, first tokens, states)
+            while n_survivors < len(free) and queue:
+                room = len(free) - n_survivors
+                cands = []
+                while queue and len(cands) < room:
+                    cands.append(queue.popleft())
+                if not can_batch:
+                    cands, rest = cands[:1], cands[1:]
+                    for item in reversed(rest):
+                        queue.appendleft(item)
+                now = time.perf_counter()
+                lens = [len(req.prompt_tokens) for _, req in cands]
+                n = len(cands)
+                batched = n > 1
+                if batched:
+                    smax = max(lens)
+                    prompts = np.zeros((n, smax), np.int32)
+                    for i, (_, req) in enumerate(cands):
+                        prompts[i, smax - lens[i]:] = req.prompt_tokens
+                    logits, rcaches, info = engine._prefill(
+                        engine.params, tokens=jnp.asarray(prompts),
+                        qparams=engine.qparams, cache_slots=slots_len,
+                        lengths=jnp.asarray(lens, jnp.int32),
+                        row_local=True,
+                        # exact host-side solo capacities: the in-graph
+                        # f32 formula can truncate one slot differently
+                        row_capacities=jnp.asarray(
+                            [_capacity(cfg, s) for s in lens], jnp.int32)
+                        if cfg.is_moe else None)
+                else:  # exact-shape solo program (also the SSM/hybrid path)
+                    prompt = jnp.asarray(
+                        cands[0][1].prompt_tokens, jnp.int32)[None, :]
+                    logits, rcaches, info = engine._prefill(
+                        engine.params, tokens=prompt,
+                        qparams=engine.qparams, cache_slots=slots_len)
+                # the wave's ONE host sync: every candidate's first token
+                first = np.asarray(
+                    jax.device_get(jnp.argmax(logits, axis=-1)), np.int32)
+                wave_states: List[_SlotState] = []
+                wave_src: List[int] = []
+                wave_tok: List[int] = []
+                wave_surv: List[_SlotState] = []
+                for i, (idx, req) in enumerate(cands):
+                    ft = int(first[i])
+                    st = _SlotState(
+                        index=idx, request=req, tokens=[ft],
+                        prompt_len=lens[i], admit_t=now,
+                        queue_wait_s=now - t0,
+                        finish_now=(req.max_new_tokens <= 1
+                                    or (req.eos_token is not None
+                                        and ft == req.eos_token)))
+                    wave_states.append(st)
+                    if not st.finish_now:
+                        wave_src.append(i)
+                        wave_tok.append(ft)
+                        wave_surv.append(st)
+                stream.submit(partial(
+                    replay_prefill, wave_states,
+                    (info.critical_masks, info.active_masks,
+                     info.predicted_next), batched))
+                if wave_src:
+                    waves.append((rcaches, wave_src, wave_tok, wave_surv))
+                    n_survivors += len(wave_src)
+            # survivors claim free slots in pop order (== the order the
+            # one-at-a-time admission loop would have filled them)
+            fi = 0
+            for rc, src, toks, sts in waves:
+                dst = free[fi:fi + len(src)]
+                fi += len(src)
+                for st, r in zip(sts, dst):
+                    states[r] = st
+                    done[r] = False
+                    emitted[r] = 1
+                    limits[r] = st.request.max_new_tokens
+                    eos[r] = (-1 if st.request.eos_token is None
+                              else st.request.eos_token)
+                caches = self._inject_rows(
+                    caches, rc, jnp.asarray(src, jnp.int32),
+                    jnp.asarray(dst, jnp.int32))
+                tok_d = tok_d.at[jnp.asarray(dst, jnp.int32)].set(
+                    jnp.asarray(toks, jnp.int32))
+
+        n_chunks = 0
+        max_chunks = self.scfg.max_chunks or (
+            sum(-(-max(r.max_new_tokens - 1, 0) // chunk)
+                for r in requests) + len(requests) + 1)
+        try:
+            while queue or not done.all():
+                admit_boundary()      # admission at the chunk boundary
+                if done.all():
+                    continue          # drained mid-admission (1-token reqs)
+                emitted_before = emitted.copy()
+                toks_d, caches, infos, done_d, emitted_d = \
+                    engine._decode_batched(
+                        engine.params, tokens=tok_d,
+                        caches=caches, num_steps=chunk,
+                        done=jnp.asarray(done),
+                        n_emitted=jnp.asarray(emitted),
+                        limits=jnp.asarray(limits),
+                        eos_tokens=jnp.asarray(eos),
+                        qparams=engine.qparams)
+                tok_d = toks_d[-1]    # next chunk's data dep: ON DEVICE
+                # the boundary sync: ONLY the small (B,) masks cross —
+                # the (T, L, B, E) telemetry stays behind for the worker
+                done_h, emitted_h = jax.device_get((done_d, emitted_d))
+                done = np.array(done_h)   # device_get views are read-only
+                emitted = np.array(emitted_h)
+                rows = []
+                for r in range(b):
+                    st = states[r]
+                    if st is None:
+                        continue
+                    rows.append((r, st,
+                                 int(emitted[r] - emitted_before[r]),
+                                 st.prompt_len + int(emitted_before[r]),
+                                 bool(done[r])))
+                    if done[r]:
+                        states[r] = None  # evict: free to admit; the
+                        #                   worker finalizes st later
+                stream.submit(partial(
+                    replay_chunk, toks_d,
+                    (infos.critical_masks, infos.active_masks,
+                     infos.predicted_next), rows))
+                n_chunks += 1
+                assert n_chunks <= max_chunks, \
+                    f"scheduler made no progress after {n_chunks} chunks"
+            stream.drain()
+        finally:
+            stream.close()
         assert all(res is not None for res in results)
         return results
