@@ -1,8 +1,16 @@
 """Serving launcher: DyMoE-orchestrated generation with edge-latency
-accounting.
+accounting, through the step-driven engine API.
+
+One-shot (single request, greedy or sampled):
 
   PYTHONPATH=src python -m repro.launch.serve --arch olmoe-1b-7b \
-      --vram-gb 16 --mode 4/2 --prompt-len 64 --max-new 32
+      --vram-gb 16 --mode 4/2 --prompt-len 64 --max-new 32 \
+      --temperature 0.8 --top-k 40 --seed 7
+
+Open serving loop (``--requests N``): requests are SUBMITTED while the
+engine is being stepped — half up front, the rest mid-run after a few
+chunk boundaries (bursty-arrival shape) — and the last request's tokens
+are streamed as TokenChunk events while its replay finalizes.
 """
 from __future__ import annotations
 
@@ -15,7 +23,8 @@ import jax
 from repro.configs import get_config
 from repro.models import init_params
 from repro.models.config import DyMoEPolicy
-from repro.serving import DyMoEEngine, EngineConfig, Request
+from repro.serving import DyMoEEngine, EngineConfig, Request, \
+    SamplingParams
 from repro.serving.cost_model import EdgeProfile
 
 
@@ -27,6 +36,18 @@ def main() -> None:
     ap.add_argument("--retention", type=float, default=0.75)
     ap.add_argument("--prompt-len", type=int, default=64)
     ap.add_argument("--max-new", type=int, default=32)
+    ap.add_argument("--temperature", type=float, default=0.0,
+                    help="per-request sampling temperature (0 = greedy)")
+    ap.add_argument("--top-k", type=int, default=0,
+                    help="top-k truncation for sampled decoding (0 = off)")
+    ap.add_argument("--seed", type=int, default=None,
+                    help="per-request PRNG seed; required for "
+                         "temperature > 0 (else greedy fallback)")
+    ap.add_argument("--requests", type=int, default=1,
+                    help="> 1: open serving-loop demo with staggered "
+                         "submissions and streamed tokens")
+    ap.add_argument("--num-slots", type=int, default=2,
+                    help="device slots for the open serving loop")
     ap.add_argument("--reduced", action="store_true", default=True)
     ap.add_argument("--full", dest="reduced", action="store_false")
     ap.add_argument("--no-cache", action="store_true")
@@ -48,14 +69,54 @@ def main() -> None:
         enable_cache=not args.no_cache,
         enable_prefetch=not args.no_prefetch,
         enable_dyquant=args.mode != "off"))
-    prompt = list(range(1, args.prompt_len + 1))
-    res = engine.generate(Request(prompt_tokens=prompt,
-                                  max_new_tokens=args.max_new))
+    sampling = SamplingParams(temperature=args.temperature,
+                              top_k=args.top_k, seed=args.seed)
+
+    def request(i: int) -> Request:
+        # per-request sampling stream: seed offset keeps streams distinct
+        sp = (sampling if sampling.seed is None else
+              dataclasses.replace(sampling, seed=sampling.seed + i))
+        return Request(prompt_tokens=list(range(1 + i, args.prompt_len
+                                                + 1 + i)),
+                       max_new_tokens=args.max_new, sampling=sp,
+                       request_id=f"req-{i}")
+
+    if args.requests <= 1:
+        res = engine.generate(request(0))
+        print(json.dumps(dict(
+            arch=cfg.name, mode=args.mode, vram_gb=args.vram_gb,
+            temperature=args.temperature, top_k=args.top_k, seed=args.seed,
+            ttft_ms=res.ttft_s * 1e3, tpot_ms=res.tpot_s * 1e3,
+            wall_s=res.wall_s, tokens=res.tokens[:16],
+            cache=res.cache_stats), indent=2))
+        return
+
+    # ---- open serving loop: staggered submissions + streamed tokens
+    session = engine.serve(num_slots=args.num_slots,
+                           slots_len=args.prompt_len + args.max_new
+                           + args.requests)
+    n_first = max(1, args.requests // 2)
+    handles = [session.submit(request(i)) for i in range(n_first)]
+    for _ in range(2):           # the engine is already decoding...
+        engine.step()
+    for i in range(n_first, args.requests):   # ...when the burst arrives
+        handles.append(engine.submit(request(i)))
+    print(f"# streaming {handles[-1].request_id} "
+          f"(submitted mid-run, admitted into a freed slot):")
+    for ev in handles[-1].stream():
+        print(f"  {ev.phase:8s} +{len(ev.tokens):2d} tok "
+              f"modeled {ev.modeled_s * 1e3:8.3f} ms  {ev.tokens}")
+    results = [h.result() for h in handles]
+    session.flush()
+    session.close()
     print(json.dumps(dict(
         arch=cfg.name, mode=args.mode, vram_gb=args.vram_gb,
-        ttft_ms=res.ttft_s * 1e3, tpot_ms=res.tpot_s * 1e3,
-        wall_s=res.wall_s, tokens=res.tokens[:16],
-        cache=res.cache_stats), indent=2))
+        num_slots=args.num_slots, requests=[
+            dict(id=h.request_id, ttft_ms=r.ttft_s * 1e3,
+                 tpot_ms=r.tpot_s * 1e3, queue_wait_ms=(r.queue_wait_s
+                                                        or 0) * 1e3,
+                 tokens=r.tokens[:8])
+            for h, r in zip(handles, results)]), indent=2))
 
 
 if __name__ == "__main__":

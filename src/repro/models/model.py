@@ -801,6 +801,7 @@ def decode_many(params, cfg: ModelConfig, tokens: jnp.ndarray, caches: Any,
                 *, num_steps: int, start_step=0,
                 qparams: Optional[dict] = None, rng_key=None,
                 temperature=0.0, top_k: int = 0,
+                row_keys=None, row_temperatures=None, row_top_ks=None,
                 ) -> Tuple[jnp.ndarray, Any, DyMoEInfo]:
     """Fused multi-token decode: ``lax.scan`` over ``num_steps`` decode
     steps with on-device sampling, so a whole chunk costs ONE dispatch and
@@ -826,15 +827,27 @@ def decode_many(params, cfg: ModelConfig, tokens: jnp.ndarray, caches: Any,
 
     ``temperature > 0`` without ``rng_key`` falls back to greedy with a
     warning (same contract as ``sample_token``).
+
+    ``row_keys`` (B, 2) raw PRNG keys + ``row_temperatures`` (B,) +
+    ``row_top_ks`` (B,) switch sampling to PER-ROW mode (the static batch
+    path serving mixed per-request sampling): step ``i`` samples row r
+    with ``fold_in(row_keys[r], start_step + i)`` through
+    :func:`repro.serving.sampler.sample_token_rows`, so each row's tokens
+    are bit-identical to a solo decode with that row's key — rows with
+    ``temperature <= 0`` stay greedy. All three arrays are traced (mixed
+    sampling never recompiles); ``rng_key``/``temperature``/``top_k`` are
+    ignored in this mode.
     """
     # local import: serving depends on models, not the reverse
-    from repro.serving.sampler import sample_token
+    from repro.serving.sampler import sample_token, sample_token_rows
 
+    row_mode = row_keys is not None
     concrete_t = isinstance(temperature, (int, float))
-    if concrete_t and temperature > 0.0 and rng_key is None:
+    if not row_mode and concrete_t and temperature > 0.0 and rng_key is None:
         warnings.warn("decode_many: temperature > 0 but no PRNG key was "
                       "provided; falling back to greedy decoding")
-    greedy = rng_key is None or (concrete_t and temperature <= 0.0)
+    greedy = not row_mode and (
+        rng_key is None or (concrete_t and temperature <= 0.0))
     key = rng_key if rng_key is not None else jax.random.PRNGKey(0)
     steps = jnp.arange(num_steps, dtype=jnp.int32) + start_step
 
@@ -842,7 +855,11 @@ def decode_many(params, cfg: ModelConfig, tokens: jnp.ndarray, caches: Any,
         tok, caches, key = carry
         logits, caches, info = decode_step(params, cfg, tok, caches,
                                            qparams=qparams)
-        if greedy:
+        if row_mode:
+            keys_i = jax.vmap(lambda k: jax.random.fold_in(k, i))(row_keys)
+            nxt = sample_token_rows(logits, keys_i, row_temperatures,
+                                    row_top_ks)
+        elif greedy:
             nxt = sample_token(logits)
         else:
             nxt = sample_token(logits, jax.random.fold_in(key, i),
@@ -880,9 +897,10 @@ def decode_many_batched(params, cfg: ModelConfig, tokens: jnp.ndarray,
                         done: jnp.ndarray, n_emitted: jnp.ndarray,
                         limits: jnp.ndarray, eos_tokens: jnp.ndarray,
                         qparams: Optional[dict] = None,
+                        rng_keys=None, temperatures=None, top_ks=None,
                         ) -> Tuple[jnp.ndarray, Any, DyMoEInfo,
                                    jnp.ndarray, jnp.ndarray]:
-    """Fused multi-step GREEDY decode over a slot batch with a per-row
+    """Fused multi-step decode over a slot batch with a per-row
     done-mask — the device half of the continuous-batching scheduler.
 
     Rows decode independently (``decode_step`` with ``per_row_moe``: own
@@ -897,17 +915,35 @@ def decode_many_batched(params, cfg: ModelConfig, tokens: jnp.ndarray,
     full ``num_steps`` chunks (one trace, no per-remainder recompiles)
     and evict/admit at chunk boundaries.
 
+    Sampling is GREEDY unless ``rng_keys`` (B, 2) raw per-row PRNG keys +
+    ``temperatures`` (B,) + ``top_ks`` (B,) are given (all traced — mixed
+    per-request sampling never recompiles). Row r's step draws its key as
+    ``fold_in(rng_keys[r], n_emitted[r])`` — the fold count is the ROW'S
+    OWN emitted-token counter, not the scan index, so a request's PRNG
+    stream is indexed by its global token position exactly like solo
+    ``generate``'s ``fold_in(key, token_index)``: sampled tokens are
+    bit-identical to the solo run and invariant to ``decode_chunk``, slot
+    placement and admission order. Rows with ``temperature <= 0`` take
+    the same greedy argmax as the no-sampling trace.
+
     tokens/done/n_emitted/limits/eos_tokens: (B,). Returns (tokens
     (num_steps, B), caches, stacked DyMoEInfo with leaves (num_steps, L,
     B, E), done (B,), n_emitted (B,)).
     """
+    # local import: serving depends on models, not the reverse
+    from repro.serving.sampler import sample_token_rows
+
     done = done.astype(bool)
 
     def body(carry, _):
         tok, caches, dn, emitted = carry
         logits, new_caches, info = decode_step(
             params, cfg, tok, caches, qparams=qparams, per_row_moe=True)
-        nxt = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        if rng_keys is None:
+            nxt = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        else:
+            keys = jax.vmap(jax.random.fold_in)(rng_keys, emitted)
+            nxt = sample_token_rows(logits, keys, temperatures, top_ks)
         nxt = jnp.where(dn, tok, nxt)
         live = ~dn
 

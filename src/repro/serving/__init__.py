@@ -1,11 +1,14 @@
 from repro.serving.cost_model import EdgeProfile, EdgeCostModel
 from repro.serving.engine import DyMoEEngine, EngineConfig, \
     GenerationResult, ReplayStream
-from repro.serving.sampler import sample_token
-from repro.serving.request import Request
+from repro.serving.sampler import sample_token, sample_token_rows
+from repro.serving.request import Request, RequestHandle, SamplingParams, \
+    TokenChunk
 from repro.serving.scheduler import ContinuousBatchingScheduler, \
     SchedulerConfig
 
 __all__ = ["EdgeProfile", "EdgeCostModel", "DyMoEEngine", "EngineConfig",
-           "GenerationResult", "ReplayStream", "sample_token", "Request",
-           "ContinuousBatchingScheduler", "SchedulerConfig"]
+           "GenerationResult", "ReplayStream", "sample_token",
+           "sample_token_rows", "Request", "RequestHandle",
+           "SamplingParams", "TokenChunk", "ContinuousBatchingScheduler",
+           "SchedulerConfig"]

@@ -25,15 +25,36 @@ recovers the token-at-a-time loop (bit-identical greedy tokens and modeled
 numbers, just slower); ~16 amortizes dispatch away. EOS early-exit happens
 between chunks.
 
-**Continuous batching.** ``generate_batch`` serves its requests through
-:class:`repro.serving.scheduler.ContinuousBatchingScheduler`: a fixed set
-of device slots, admission by exact-shape solo prefill at chunk
-boundaries, per-row done-masks on device, and per-request telemetry
-replay — every request gets real modeled TTFT/TPOT and tokens
-bit-identical to a solo :meth:`DyMoEEngine.generate`. The old lockstep
-batch survives as ``generate_batch(static=True)`` (now ragged-capable via
-right-aligned padded prefill) and is the baseline the benchmark measures
-the scheduler against.
+**Step-driven serving.** The serving surface is an OPEN engine API built
+on :class:`repro.serving.scheduler.ContinuousBatchingScheduler` — the
+lifecycle is submission → admission wave → fused decode chunk → telemetry
+replay → stream::
+
+    handle = engine.submit(request)   # -> RequestHandle, FIFO-queued
+    engine.step()                     # advance one chunk boundary: admit
+                                      #   new requests into free slots, run
+                                      #   one fused chunk, evict finished /
+                                      #   cancelled rows
+    for ev in handle.stream():        # TokenChunk events as each replay
+        ...                           #   unit finalizes (pipelined worker)
+    handle.cancel()                   # slot freed at the next boundary
+    res = handle.result()             # final GenerationResult
+
+Requests carry per-request :class:`~repro.serving.request.SamplingParams`
+(temperature / top-k / seed, validated at submission); the scheduler
+threads them as per-row arrays with counter-derived ``fold_in`` PRNG
+streams through the decode scan, so sampled tokens are bit-identical
+between solo :meth:`DyMoEEngine.generate`, the static batch and
+continuous batching, and invariant to chunk size and admission order.
+
+:meth:`DyMoEEngine.generate` and :meth:`DyMoEEngine.generate_batch` are
+thin wrappers over that loop (submit everything, drive ``step()`` until
+idle, flush the replay stream) — bit-exact with the single-request fused
+reference path :meth:`DyMoEEngine.generate_reference`, which survives as
+the oracle the serving tests compare against. The old lockstep batch
+survives as ``generate_batch(static=True)`` (ragged-capable via
+right-aligned padded prefill, per-row sampling) and is the baseline the
+benchmark measures the scheduler against.
 
 Ablation rows map to :class:`EngineConfig` flags (cache / prefetch /
 dyquant / 4-2 vs 4-0), matching paper Table 3 rows 1–6.
@@ -44,7 +65,6 @@ import dataclasses
 import queue as _queue
 import threading
 import time
-import warnings
 from functools import partial
 from typing import Callable, Dict, List, Optional, Sequence, Tuple
 
@@ -61,8 +81,9 @@ from repro.models import ModelConfig
 from repro.models.model import decode_many, decode_many_batched, prefill, \
     quantize_model
 from repro.serving.cost_model import EdgeCostModel, EdgeProfile, expert_bytes
-from repro.serving.request import Request
-from repro.serving.sampler import sample_token
+from repro.serving.request import Request, RequestHandle
+from repro.serving.sampler import raw_key_data, resolve_sampling, \
+    sample_token, sample_token_rows
 
 __all__ = ["EngineConfig", "DyMoEEngine", "GenerationResult",
            "ReplayStream"]
@@ -104,6 +125,13 @@ class ReplayStream:
             self._thread = threading.Thread(
                 target=self._loop, name="dymoe-replay", daemon=True)
             self._thread.start()
+
+    @property
+    def poisoned(self) -> bool:
+        """A job failed: queued/later jobs are skipped and no further
+        finalize will ever run. Waiters that cannot call submit()/drain()
+        (e.g. a non-driving stream consumer) poll this to bail out."""
+        return self._poisoned or self._exc is not None
 
     def _loop(self) -> None:
         while True:
@@ -184,6 +212,9 @@ class GenerationResult:
     # HLO actually moves now that execution runs from packed buffers):
     prefill_weight_bytes: Optional[int] = None
     decode_weight_bytes_per_tok: Optional[float] = None
+    # the request was cancelled mid-flight: ``tokens`` is the partial
+    # output up to the chunk boundary where its slot was freed
+    cancelled: bool = False
 
 
 class DyMoEEngine:
@@ -211,6 +242,7 @@ class DyMoEEngine:
             partial(decode_many_batched, cfg=cfg),
             static_argnames=("num_steps",))
         self._orch: Optional[DynamicExpertOrchestrator] = None
+        self._session = None   # engine-owned step-driven serving session
 
     # ------------------------------------------------------------ system
     def _make_orchestrator(self) -> Optional[DynamicExpertOrchestrator]:
@@ -291,23 +323,76 @@ class DyMoEEngine:
         timings = orch.step_batch(crit, active, pred, compute)
         return timings, [t.total_s for t in timings], wbytes
 
-    # -------------------------------------------------------------- API
-    def _effective_sampling(self, request: Request, rng_key
-                            ) -> Tuple[float, int]:
-        """Greedy fallback: sampling without a PRNG key can't crash the
-        serving loop (see ``sample_token``)."""
-        if request.temperature > 0.0 and rng_key is None:
-            warnings.warn("generate: request.temperature > 0 but "
-                          "rng_key=None; falling back to greedy decoding")
-            return 0.0, 0
-        return request.temperature, request.top_k
+    # ------------------------------------------------- step-driven API
+    def serve(self, num_slots: Optional[int] = None, *,
+              pipeline: Optional[bool] = None,
+              slots_len: Optional[int] = None):
+        """Open (and remember) a step-driven serving session — the open
+        counterpart of ``generate_batch``. Returns the
+        :class:`~repro.serving.scheduler.ContinuousBatchingScheduler`
+        session; :meth:`submit` / :meth:`step` delegate to it.
 
+        ``slots_len`` sets the per-slot cache length (default:
+        ``sliding_window`` or ``cfg.max_seq_len``); a submitted request
+        must fit ``prompt_len + max_new_tokens`` inside it.
+
+        An existing engine-owned session is retired first (its submitted
+        replay jobs are flushed, its worker stopped) — requests still
+        queued or live on it will never finalize, so drain it yourself
+        before re-serving if you care about them."""
+        from repro.serving.scheduler import ContinuousBatchingScheduler
+
+        if self._session is not None and not self._session.closed:
+            self._session.flush()
+            self._session.close()
+        session = ContinuousBatchingScheduler(self, num_slots=num_slots)
+        session._ensure_started(slots_len=slots_len, pipeline=pipeline)
+        self._session = session
+        return session
+
+    def submit(self, request: Request, rng_key=None) -> RequestHandle:
+        """Queue ``request`` on the engine's serving session (opened with
+        defaults if :meth:`serve` wasn't called) for admission at the next
+        chunk boundary. Returns a :class:`RequestHandle` — see
+        ``handle.stream()`` / ``handle.result()`` / ``handle.cancel()``."""
+        if self._session is None or self._session.closed:
+            self.serve()
+        return self._session.submit(request, rng_key=rng_key)
+
+    def step(self) -> bool:
+        """Advance the engine's serving session by one chunk boundary
+        (admit → decode chunk → evict). Returns True while there is live
+        or queued work. Submission is legal between any two steps."""
+        if self._session is None:
+            raise RuntimeError(
+                "no serving session is open: call serve() or submit() first")
+        return self._session.step()
+
+    # -------------------------------------------------------------- API
     def generate(self, request: Request, rng_key=None) -> GenerationResult:
-        """Serve one request (edge scenario: batch = 1), decoding in fused
-        ``decode_chunk``-sized device chunks. Token i's PRNG key is
-        ``fold_in(rng_key, i)``, so outputs are chunking-invariant."""
+        """Serve one request (edge scenario: batch = 1): a thin wrapper
+        over the step-driven API — one fresh single-slot session, submit,
+        drive :meth:`~repro.serving.scheduler.ContinuousBatchingScheduler.step`
+        to completion. Tokens and modeled TTFT/TPOT are bit-identical to
+        :meth:`generate_reference` (greedy and sampled: both index the
+        request's PRNG stream by token position), and the serial replay
+        keeps ``decode_wall_s`` comparable."""
+        from repro.serving.scheduler import ContinuousBatchingScheduler
+
+        sched = ContinuousBatchingScheduler(self, num_slots=1)
+        return sched.run([request], pipeline=False, rng_keys=[rng_key])[0]
+
+    def generate_reference(self, request: Request, rng_key=None
+                           ) -> GenerationResult:
+        """Single-request fused REFERENCE path (no scheduler): prefill +
+        ``decode_chunk``-sized :func:`decode_many` chunks with inline
+        telemetry replay. Token i's PRNG key is ``fold_in(rng_key, i)``,
+        so outputs are chunking-invariant. This is the bit-exactness
+        oracle the serving tests compare the step-driven engine against;
+        :meth:`generate` must match it token- and modeled-number-exact."""
         cfg = self.cfg
-        temperature, top_k = self._effective_sampling(request, rng_key)
+        temperature, top_k, rng_key = resolve_sampling(
+            request, rng_key, context="generate")
         sampling = temperature > 0.0
         prompt = jnp.asarray(request.prompt_tokens, jnp.int32)[None, :]
         s = prompt.shape[1]
@@ -389,16 +474,20 @@ class DyMoEEngine:
                        static: bool = False,
                        pipeline: Optional[bool] = None,
                        ) -> List[GenerationResult]:
-        """Batched greedy serving (throughput path).
+        """Batched serving (throughput path): a thin wrapper over the
+        step-driven API — submit every request, drive ``step()`` until the
+        session drains, flush the replay stream.
 
         Default: CONTINUOUS BATCHING — requests stream through a fixed
         set of ``num_slots`` device slots (see
         :class:`repro.serving.scheduler.ContinuousBatchingScheduler`):
         ragged prompt lengths, per-request ``max_new_tokens`` /
-        ``eos_token``, eviction of finished rows and admission of waiting
-        ones at every chunk boundary, per-row tokens bit-identical to solo
-        :meth:`generate`, and REAL per-request modeled TTFT/TPOT (the old
-        lockstep path returned NaN).
+        ``eos_token`` / :class:`~repro.serving.request.SamplingParams`
+        (temperature / top-k / seed — honored, with per-row
+        counter-derived PRNG streams), eviction of finished rows and
+        admission of waiting ones at every chunk boundary, per-row tokens
+        bit-identical to solo :meth:`generate`, and REAL per-request
+        modeled TTFT/TPOT (the old lockstep path returned NaN).
 
         ``pipeline`` — overlap the host telemetry replay with device
         decode (default on; see the scheduler docstring's timeline).
@@ -409,15 +498,28 @@ class DyMoEEngine:
         ``static=True`` keeps the old lockstep baseline: one batch for
         the whole call, right-aligned padding for ragged prompts, decode
         until every row finishes, DyMoE telemetry discarded (NaN modeled
-        metrics). It exists as the benchmark baseline continuous batching
-        is measured against."""
+        metrics). Per-request sampling is honored (per-row PRNG streams
+        indexed by token position, so sampled rows match their solo run
+        in the full-precision row-independent regime). It exists as the
+        benchmark baseline continuous batching is measured against.
+
+        ``rng_key`` — optional shared PRNG root for requests WITHOUT a
+        seed: request i's stream root becomes ``fold_in(rng_key, i)``
+        (distinct per request; a request's own seed wins)."""
+        rng_keys = None
+        if rng_key is not None:
+            rng_keys = [None if r.seed is not None
+                        else jax.random.fold_in(rng_key, i)
+                        for i, r in enumerate(requests)]
         if static:
-            return self._generate_batch_static(requests)
+            return self._generate_batch_static(requests, rng_keys=rng_keys)
         from repro.serving.scheduler import ContinuousBatchingScheduler
         return ContinuousBatchingScheduler(
-            self, num_slots=num_slots).run(requests, pipeline=pipeline)
+            self, num_slots=num_slots).run(requests, pipeline=pipeline,
+                                           rng_keys=rng_keys)
 
-    def _generate_batch_static(self, requests: Sequence[Request]
+    def _generate_batch_static(self, requests: Sequence[Request], *,
+                               rng_keys: Optional[Sequence] = None
                                ) -> List[GenerationResult]:
         """Lockstep baseline: every request occupies a row for the whole
         call; ragged prompts are right-aligned into one padded batch
@@ -426,9 +528,19 @@ class DyMoEEngine:
         batch drains. Per-row done state is tracked incrementally — only
         each chunk's new tokens are scanned, not the whole history."""
         cfg = self.cfg
-        if any(r.temperature > 0.0 for r in requests):
-            warnings.warn("generate_batch decodes greedily; per-request "
-                          "temperature is ignored")
+        # per-request sampling: seed-derived per-row PRNG streams indexed
+        # by token position (bit-compatible with the solo/scheduler paths)
+        temps = np.zeros(len(requests), np.float32)
+        topks = np.zeros(len(requests), np.int32)
+        keys = np.zeros((len(requests), 2), np.uint32)
+        for i, r in enumerate(requests):
+            t, k, key = resolve_sampling(
+                r, rng_keys[i] if rng_keys is not None else None,
+                context=f"generate_batch(static=True) request {i}")
+            temps[i], topks[i] = t, k
+            if t > 0.0:
+                keys[i] = raw_key_data(key)
+        any_sampling = bool((temps > 0).any())
         lens = [len(r.prompt_tokens) for r in requests]
         s = max(lens)
         ragged = len(set(lens)) > 1
@@ -445,7 +557,13 @@ class DyMoEEngine:
             self.params, tokens=jnp.asarray(prompts), qparams=self.qparams,
             cache_slots=slots,
             lengths=jnp.asarray(lens, jnp.int32) if ragged else None)
-        tok = sample_token(logits)
+        if any_sampling:
+            keys_d = jnp.asarray(keys)
+            tok = sample_token_rows(
+                logits, jax.vmap(lambda k: jax.random.fold_in(k, 0))(keys_d),
+                jnp.asarray(temps), jnp.asarray(topks))
+        else:
+            tok = sample_token(logits)
         rows = [[int(t)] for t in np.asarray(tok)]
 
         # incremental done tracking: a row is re-examined only over tokens
@@ -456,12 +574,18 @@ class DyMoEEngine:
                 for i in range(b)]
         remaining = b - sum(done)
 
+        row_kw = {}
+        if any_sampling:   # per-row mode: step i folds row r's key with i
+            row_kw = dict(row_keys=keys_d,
+                          row_temperatures=jnp.asarray(temps),
+                          row_top_ks=jnp.asarray(topks))
         n_done = 1  # tokens sampled per row so far
         while n_done < max_new and remaining:
             chunk = min(self.ecfg.decode_chunk, max_new - n_done)
             toks_d, caches, _ = self._decode_many(
                 self.params, tokens=tok, caches=caches,
-                qparams=self.qparams, num_steps=chunk, start_step=n_done)
+                qparams=self.qparams, num_steps=chunk, start_step=n_done,
+                **row_kw)
             tok = toks_d[-1]
             toks_np = np.asarray(toks_d)      # one transfer per chunk
             for i in range(b):

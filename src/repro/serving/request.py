@@ -1,10 +1,56 @@
-"""Serving request / response records."""
+"""Serving request / response records and the step-driven request handle.
+
+The step-driven serving lifecycle (see
+:class:`repro.serving.scheduler.ContinuousBatchingScheduler`):
+
+    submit(Request) -> RequestHandle      # validated, FIFO-queued
+      -> admission wave at a chunk boundary (one ragged row-local prefill)
+      -> fused decode chunks with per-row counter-derived PRNG sampling
+      -> telemetry replay (pipelined ReplayStream) emits TokenChunk events
+      -> handle.result() / handle.stream() / handle.cancel()
+
+``SamplingParams`` is validated at construction — a malformed request
+fails at submission, never mid-chunk inside the scheduler where it would
+poison a whole slot batch.
+"""
 from __future__ import annotations
 
 import dataclasses
-from typing import List, Optional
+import math
+import queue as _queue
+import threading
+from typing import Iterator, List, Optional
 
-__all__ = ["Request"]
+__all__ = ["Request", "SamplingParams", "TokenChunk", "RequestHandle"]
+
+
+@dataclasses.dataclass(frozen=True)
+class SamplingParams:
+    """Per-request decoding parameters.
+
+    ``temperature <= 0`` is greedy. ``temperature > 0`` draws from the
+    (optionally top-k truncated) categorical; the PRNG stream is derived
+    from ``seed`` (``fold_in(PRNGKey(seed), token_index)``), which makes
+    sampled tokens bit-identical between solo ``generate``, the static
+    batch and continuous batching, and invariant to ``decode_chunk`` and
+    admission order. ``temperature > 0`` without a seed (or an explicit
+    ``rng_key`` at submission) falls back to greedy with a warning.
+    """
+
+    temperature: float = 0.0
+    top_k: int = 0
+    seed: Optional[int] = None
+
+    def __post_init__(self):
+        # `not >= 0` (instead of `< 0`) also rejects NaN
+        if not (self.temperature >= 0.0) or math.isinf(self.temperature):
+            raise ValueError(
+                f"SamplingParams.temperature must be a finite float >= 0, "
+                f"got {self.temperature}")
+        if self.top_k < 0:
+            raise ValueError(
+                f"SamplingParams.top_k must be >= 0, got {self.top_k} "
+                f"(a negative value would reach lax.top_k mid-chunk)")
 
 
 @dataclasses.dataclass
@@ -15,8 +61,17 @@ class Request:
     top_k: int = 0
     eos_token: Optional[int] = None   # stop (inclusive) when sampled
     request_id: Optional[str] = None
+    seed: Optional[int] = None        # per-request PRNG stream root
+    # ``sampling`` is a CONSTRUCTION convenience, not a stored field
+    # (InitVar): when given, it overwrites temperature/top_k/seed, which
+    # are the single source of truth afterwards. Because replace() never
+    # re-passes an InitVar, both ``dataclasses.replace(req,
+    # temperature=...)`` and ``dataclasses.replace(req, sampling=...)``
+    # do the obvious thing with no stale-side ambiguity. Read the
+    # validated bundle back via :attr:`sampling_params`.
+    sampling: dataclasses.InitVar[Optional[SamplingParams]] = None
 
-    def __post_init__(self):
+    def __post_init__(self, sampling: Optional[SamplingParams]):
         # fail at submission, not mid-chunk inside the scheduler, where a
         # malformed request would poison a whole slot batch
         if len(self.prompt_tokens) == 0:
@@ -25,7 +80,165 @@ class Request:
             raise ValueError(
                 f"Request.max_new_tokens must be >= 1, "
                 f"got {self.max_new_tokens}")
+        if sampling is not None:
+            self.temperature = sampling.temperature
+            self.top_k = sampling.top_k
+            self.seed = sampling.seed
+        # validate (constructing SamplingParams raises on bad values)
+        SamplingParams(temperature=self.temperature, top_k=self.top_k,
+                       seed=self.seed)
+
+    @property
+    def sampling_params(self) -> SamplingParams:
+        return SamplingParams(temperature=self.temperature,
+                              top_k=self.top_k, seed=self.seed)
 
     @property
     def prompt_len(self) -> int:
         return len(self.prompt_tokens)
+
+
+@dataclasses.dataclass(frozen=True)
+class TokenChunk:
+    """One stream event: the tokens a request gained in one replay unit
+    (its prefill, or its live steps of one decode chunk), delivered in
+    replay order — i.e. exactly the order the modeled clock advanced."""
+
+    request_id: str
+    phase: str                 # "prefill" | "decode"
+    tokens: List[int]          # tokens added by this unit (may be empty)
+    modeled_s: float           # modeled latency of this unit's live steps
+
+
+_STREAM_END = object()   # per-handle event-queue sentinel, queued last
+
+
+class RequestHandle:
+    """Live view of one submitted request.
+
+    Created by ``submit``; the request then flows through the step-driven
+    engine (admission -> chunks -> replay) while this handle exposes it:
+
+      * :meth:`result` — the final ``GenerationResult``; drives the
+        session's :meth:`step` loop itself when the caller isn't.
+      * :meth:`stream` — iterator of :class:`TokenChunk` events, delivered
+        as each replay unit finalizes on the (possibly pipelined)
+        ``ReplayStream`` worker.
+      * :meth:`cancel` — frees the slot at the next chunk boundary; the
+        result becomes partial (``result().cancelled``).
+
+    The event queue is written by the replay worker and read here. Only
+    ONE thread may drive ``session.step()``: iterate ``stream()`` (or
+    call ``result()``) with the default ``drive=True`` from that driving
+    thread, or with ``drive=False`` from a separate consumer thread that
+    only waits while someone else drives.
+    """
+
+    def __init__(self, session, index: int, request: Request,
+                 submit_t: float):
+        self._session = session
+        self.index = index
+        self.request = request
+        self.request_id = request.request_id or f"req-{index}"
+        self.submit_t = submit_t
+        self.cancel_requested = False
+        # effective sampling state, resolved at submission (greedy
+        # fallback applied); key is a raw uint32[2] PRNG key or None
+        self.temperature = 0.0
+        self.top_k = 0
+        self.key = None
+        self._events: _queue.Queue = _queue.Queue()
+        self._finished = threading.Event()
+        self._ended = False      # this handle's iterator consumed the
+        #                          end sentinel (single-consumer streams)
+        self._result = None
+
+    # ------------------------------------------------------------- state
+    @property
+    def done(self) -> bool:
+        return self._finished.is_set()
+
+    def cancel(self) -> None:
+        """Request cancellation: the scheduler frees this request's slot
+        at the next chunk boundary (or drops it from the queue if not yet
+        admitted) and finalizes a partial result. No-op once finished."""
+        if not self._finished.is_set():
+            self.cancel_requested = True
+
+    # ----------------------------------------------------------- results
+    def result(self, *, drive: bool = True):
+        """Block until this request finalizes and return its
+        ``GenerationResult``. When no other thread is driving the session
+        (``drive=True``, the default), this drives ``session.step()`` /
+        ``session.flush()`` itself until the replay worker finalizes the
+        handle; with ``drive=False`` it only WAITS (bailing out if the
+        session's replay stream poisons — no finalize can ever come)."""
+        while not self._finished.is_set():
+            if not drive:
+                self._raise_if_poisoned()
+                self._finished.wait(timeout=0.05)
+                continue
+            if not self._session.step():
+                self._session.flush()   # replay queue -> finalize
+                if not self._finished.is_set():
+                    raise RuntimeError(
+                        f"{self.request_id} cannot make progress: the "
+                        "session is idle but the request never finalized")
+        return self._result
+
+    def stream(self, *, drive: bool = True) -> Iterator[TokenChunk]:
+        """Iterate this request's :class:`TokenChunk` events in replay
+        order; ends when the request finalizes — the concatenated event
+        tokens equal ``result().tokens``. With ``drive=True`` (default)
+        the iterator drives the session itself while the event queue runs
+        dry (same contract as :meth:`result`); pass ``drive=False`` when
+        consuming from a second thread while another thread drives —
+        the iterator then only WAITS for events."""
+        while True:
+            try:
+                ev = self._events.get_nowait()
+            except _queue.Empty:
+                if self._finished.is_set():
+                    # _finish() sets the event before enqueueing the
+                    # sentinel: if we haven't consumed the sentinel yet,
+                    # trailing events (and it) are in — or about to hit —
+                    # the queue; keep draining instead of returning early
+                    if self._ended:
+                        return   # sentinel consumed (e.g. second call)
+                    continue
+                if not drive:
+                    self._raise_if_poisoned()
+                    try:   # wait for the driving thread's replay worker
+                        ev = self._events.get(timeout=0.05)
+                    except _queue.Empty:
+                        continue
+                elif not self._session.step():
+                    self._session.flush()
+                    continue
+                else:
+                    continue
+            if ev is _STREAM_END:
+                self._ended = True
+                return
+            yield ev
+
+    def _raise_if_poisoned(self) -> None:
+        stream = getattr(self._session, "_stream", None)
+        if stream is not None and stream.poisoned:
+            raise RuntimeError(
+                f"{self.request_id}: the session's replay stream is "
+                "poisoned by an earlier job failure; this request will "
+                "never finalize")
+
+    # ------------------------------------------- scheduler-facing hooks
+    def _push_event(self, ev: TokenChunk) -> None:
+        self._events.put(ev)
+
+    def _finish(self, result) -> None:
+        # replay-worker context. Order matters: result, then the event,
+        # then the sentinel — a consumer that observes `done` can rely on
+        # the result, and stream() treats `done && sentinel-not-consumed`
+        # as "keep draining", so the sentinel may land last
+        self._result = result
+        self._finished.set()
+        self._events.put(_STREAM_END)

@@ -1,12 +1,44 @@
-"""Token sampling: greedy / temperature / top-k."""
+"""Token sampling: greedy / temperature / top-k, plus the per-row
+variant the continuous-batching scheduler threads through the fused
+decode scan (every slot carries its own temperature / top-k / PRNG
+stream)."""
 from __future__ import annotations
 
 import warnings
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
-__all__ = ["sample_token"]
+__all__ = ["sample_token", "sample_token_rows", "raw_key_data",
+           "resolve_sampling"]
+
+
+def resolve_sampling(request, rng_key=None, *, context: str):
+    """Resolve a request's EFFECTIVE sampling state — the one contract
+    every serving path (scheduler submit, solo reference, static batch)
+    shares: the PRNG stream root is ``rng_key`` if given, else
+    ``PRNGKey(request.seed)``; ``temperature > 0`` with neither falls
+    back to greedy with a warning (a keyless request can't crash the
+    serving loop). Returns ``(temperature, top_k, key-or-None)``."""
+    key = rng_key
+    if key is None and request.seed is not None:
+        key = jax.random.PRNGKey(request.seed)
+    if request.temperature > 0.0 and key is None:
+        warnings.warn(
+            f"{context}: temperature > 0 but neither a seed nor an "
+            "rng_key was provided; falling back to greedy decoding")
+        return 0.0, 0, None
+    return request.temperature, request.top_k, key
+
+
+def raw_key_data(key) -> np.ndarray:
+    """Coerce a PRNG key — raw uint32[2] or new-style typed — to raw host
+    key data, the (B, 2)-stackable form the per-row samplers consume."""
+    if hasattr(key, "dtype") and jnp.issubdtype(key.dtype,
+                                                jax.dtypes.prng_key):
+        key = jax.random.key_data(key)
+    return np.asarray(key, np.uint32)
 
 
 def sample_token(logits: jnp.ndarray, key=None, *, temperature=0.0,
@@ -33,7 +65,44 @@ def sample_token(logits: jnp.ndarray, key=None, *, temperature=0.0,
         return jnp.argmax(logits, axis=-1).astype(jnp.int32)
     logits = logits / temperature
     if top_k:
-        vals, _ = jax.lax.top_k(logits, top_k)
+        # clip to the vocab — matching sample_token_rows' jnp.clip — so a
+        # too-large top_k degrades to full-vocab sampling on EVERY path
+        # instead of crashing lax.top_k mid-chunk on this one
+        vals, _ = jax.lax.top_k(logits, min(top_k, logits.shape[-1]))
         thresh = vals[..., -1:]
         logits = jnp.where(logits >= thresh, logits, -jnp.inf)
     return jax.random.categorical(key, logits, axis=-1).astype(jnp.int32)
+
+
+def sample_token_rows(logits: jnp.ndarray, keys: jnp.ndarray,
+                      temperatures: jnp.ndarray, top_ks: jnp.ndarray
+                      ) -> jnp.ndarray:
+    """Per-row sampling: logits (B, V), keys (B, 2) raw PRNG keys,
+    temperatures (B,) f32, top_ks (B,) int32 -> (B,) int32.
+
+    Row i is BIT-IDENTICAL to ``sample_token(logits[i:i+1], keys[i],
+    temperature=temperatures[i], top_k=top_ks[i])`` — this is the
+    contract that makes continuous-batching sampled tokens bit-equal to
+    solo ``generate`` (both draw ``categorical`` over a (1, V) row with
+    the same key and the same top-k threshold). Everything is traced, so
+    serving mixed per-request temperatures / top-k values never
+    recompiles: rows with ``temperature <= 0`` take the greedy argmax,
+    and the per-row DYNAMIC top-k uses a sort-derived k-th-largest
+    threshold (exactly ``lax.top_k``'s ``vals[..., -1]``, which needs a
+    static k). jit/vmap/scan-safe.
+    """
+    v = logits.shape[-1]
+
+    def one(lrow, key, t, k):
+        safe_t = jnp.where(t > 0.0, t, 1.0)
+        scaled = (lrow / safe_t)[None]                     # (1, V) as solo
+        kk = jnp.clip(k, 0, v)
+        desc = -jnp.sort(-scaled, axis=-1)
+        thresh = jnp.where(kk > 0, desc[0, jnp.maximum(kk - 1, 0)],
+                           -jnp.inf)
+        masked = jnp.where(scaled >= thresh, scaled, -jnp.inf)
+        samp = jax.random.categorical(key, masked, axis=-1)[0]
+        return jnp.where(t > 0.0, samp,
+                         jnp.argmax(lrow)).astype(jnp.int32)
+
+    return jax.vmap(one)(logits, keys, temperatures, top_ks)

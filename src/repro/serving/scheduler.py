@@ -1,13 +1,50 @@
-"""Continuous-batching scheduler — request-level scheduling at chunk
-boundaries, with the host/device work PIPELINED (ROADMAP: async host
-telemetry replay + batched admission prefill; cf. HOBBIT's overlap of
-expert I/O with compute, arXiv 2411.01433, and D²MoE's serving loop that
-hides scheduling work behind execution, arXiv 2504.15299).
+"""Step-driven continuous-batching scheduler — an OPEN serving session
+(``submit`` / ``step`` / ``stream`` / ``cancel``) over a fixed slot batch,
+with the host/device work PIPELINED (cf. HOBBIT's overlap of expert I/O
+with compute, arXiv 2411.01433, and D²MoE's open serving loop that admits
+and schedules requests while execution is in flight, arXiv 2504.15299).
 
-The chunked decode loop (PR 2) created a natural scheduling point: between
-two fused ``decode_chunk`` device dispatches the host holds the batch
-state anyway. This module owns a FIFO request queue and a fixed set of
-``num_slots`` device slots and, at every chunk boundary:
+**Lifecycle.** The edge serving loop receives traffic while it runs, so
+the session is an open machine rather than a batch call:
+
+    handle = session.submit(request)     # validate, FIFO-queue, return
+    session.step()                       # advance ONE chunk boundary:
+                                         #   1. free slots of cancelled rows
+                                         #   2. admission wave(s) into free
+                                         #      slots (one ragged row-local
+                                         #      prefill per wave)
+                                         #   3. dispatch one fused decode
+                                         #      chunk; sync only the (B,)
+                                         #      done/emitted masks; evict
+                                         #      finished rows; submit the
+                                         #      chunk's telemetry-replay job
+    handle.stream()                      # TokenChunk events, in replay order
+    handle.cancel()                      # slot freed at the next boundary;
+                                         #   result() becomes partial
+    handle.result()                      # final GenerationResult
+
+Requests may be submitted at ANY point between steps — a newly submitted
+request is admitted at the next boundary into whatever slot has drained
+(mid-run admission). ``run(requests)`` survives as the batch wrapper:
+submit everything, loop ``step()`` until idle, ``flush()`` the replay
+stream, collect results — ``DyMoEEngine.generate`` / ``generate_batch``
+are thin wrappers over exactly that loop.
+
+**Per-request sampling.** Each request carries ``SamplingParams``
+(temperature / top-k / seed, validated at submission). The scheduler
+threads them as per-row arrays through
+:func:`repro.models.model.decode_many_batched`: row r's step draws its
+PRNG key as ``fold_in(PRNGKey(seed_r), n_emitted_r)`` — a counter-derived
+stream indexed by the request's OWN token position — and samples through
+the per-row sampler (bit-identical to ``sample_token`` on the row).
+Because row logits are batch-independent (row-local Critical sets) and
+the fold count is the per-row counter, sampled tokens are bit-identical
+to a solo ``generate`` of the same request and invariant to
+``decode_chunk``, slot placement and admission order. Greedy-only
+sessions keep the sampling-free device trace (zero overhead) until the
+first sampled request arrives (one retrace).
+
+**At every chunk boundary** the session:
 
   * **evicts** finished rows (their per-row done-mask froze them on device
     mid-chunk: token re-fed, caches pinned, telemetry zeroed — see
@@ -42,7 +79,9 @@ state anyway. This module owns a FIFO request queue and a fixed set of
   FIFO over chunks, so the shared cache/clock replay order is exactly the
   serial order and the modeled TTFT/TPOT stay bit-identical to
   ``pipeline=False``. A request's :class:`GenerationResult` is finalized
-  by the worker when its last replay drains.
+  by the worker when its last replay drains, which is also when its
+  :class:`~repro.serving.request.TokenChunk` stream events fire — stream
+  delivery order IS replay (modeled-clock) order.
 
 Ragged prompt lengths need no per-request padding on this path: an
 admission wave pads only to ITS OWN longest prompt, each row prefills at
@@ -54,8 +93,8 @@ Three properties the design buys:
 
   * **Per-request math parity** — admission prefill rows and decode rows
     are row-independent programs (own row-local Critical set per
-    request), so every slot's greedy tokens are bit-identical to serving
-    that request alone.
+    request), so every slot's tokens — greedy AND sampled — are
+    bit-identical to serving that request alone.
   * **Per-request system accounting** — each row's telemetry block is
     replayed through the ONE shared orchestrator (requests share the
     device's expert cache, as they would share VRAM), yielding real
@@ -68,18 +107,15 @@ Three properties the design buys:
 Per-request wall accounting: ``queue_wait_s`` is submission→admission,
 ``wall_s`` is the SERVICE wall (admission→result), so a short request
 admitted late no longer reports the whole run's elapsed time.
-
-Decoding is greedy (per-request temperature falls back with a warning,
-matching the historical ``generate_batch`` contract).
 """
 from __future__ import annotations
 
 import dataclasses
+import threading
 import time
-import warnings
 from collections import deque
 from functools import partial
-from typing import Deque, List, Optional, Sequence, Tuple
+from typing import Deque, List, Optional, Sequence
 
 import jax
 import jax.numpy as jnp
@@ -89,7 +125,9 @@ from repro.core.orchestrator import StepTiming
 from repro.models.kv_cache import KVCache
 from repro.models.layers.moe import _capacity
 from repro.models.model import init_decode_state
-from repro.serving.request import Request
+from repro.serving.request import Request, RequestHandle, TokenChunk
+from repro.serving.sampler import raw_key_data, resolve_sampling, \
+    sample_token_rows
 
 __all__ = ["SchedulerConfig", "ContinuousBatchingScheduler"]
 
@@ -97,25 +135,29 @@ __all__ = ["SchedulerConfig", "ContinuousBatchingScheduler"]
 @dataclasses.dataclass(frozen=True)
 class SchedulerConfig:
     num_slots: int = 4            # concurrent device slots (decode batch)
-    max_chunks: Optional[int] = None  # safety valve; None = auto bound
+    max_chunks: Optional[int] = None  # run() safety valve; None = auto
     pipeline: bool = True         # overlap host replay with device decode
     # replay-queue bound: a slow host replay backpressures the dispatch
     # loop instead of accumulating unbounded telemetry device arrays
     max_inflight_chunks: int = 4
+    # per-slot cache length for OPEN sessions (submit/step); None defaults
+    # to sliding_window or cfg.max_seq_len. run() sizes it to its workload.
+    slots_len: Optional[int] = None
 
 
 @dataclasses.dataclass
 class _SlotState:
     """Host-side bookkeeping for one admitted request. Mutated by the
-    replay stream only (after admission), read by ``finalize`` there."""
+    replay stream only (after admission), read by ``_finalize`` there."""
 
-    index: int                    # position in the submitted request list
+    handle: RequestHandle
     request: Request
     tokens: List[int]
     prompt_len: int
     admit_t: float                # perf_counter at admission
-    queue_wait_s: float           # submission (run start) -> admission
+    queue_wait_s: float           # submission -> admission
     finish_now: bool = False      # one-token request: finalize at prefill
+    decode_t0: float = 0.0        # decode-wall clock start (post-prefill)
     ttft_s: float = 0.0           # set by the prefill replay job
     prefill_timing: Optional[StepTiming] = None
     prefill_weight_bytes: int = 0
@@ -135,13 +177,29 @@ class ContinuousBatchingScheduler:
     full static ``decode_chunk`` length regardless of per-row remaining
     budgets (frozen rows are free in the modeled accounting and keep the
     trace count at one), so admission/eviction never recompiles.
+
+    One instance is one serving SESSION: state (slot batch, shared
+    orchestrator, replay stream) is allocated lazily at the first
+    ``submit``/``step`` and lives until :meth:`close`. Only one thread may
+    drive ``step()``; ``submit``/``cancel`` are legal from other threads
+    (the request queue is lock-guarded), and the replay worker is the
+    only other writer (it owns ``_SlotState`` after admission and
+    finalizes handles).
     """
 
     def __init__(self, engine, num_slots: Optional[int] = None,
                  scfg: SchedulerConfig = SchedulerConfig()):
         self.engine = engine
         self.scfg = scfg
-        self._num_slots = num_slots  # None: resolved per run()
+        self._num_slots = num_slots  # None: resolved at start
+        self._started = False
+        self.closed = False
+        self._handles: List[RequestHandle] = []
+        self._queue: Deque[RequestHandle] = deque()
+        # guards _queue/_handles: submit() is legal from other threads
+        # while ONE thread drives step()
+        self._lock = threading.Lock()
+        self._n_chunks = 0
 
     # ----------------------------------------------------------- helpers
     def _slot_budget(self, requests: Sequence[Request]) -> int:
@@ -203,247 +261,443 @@ class ContinuousBatchingScheduler:
             lambda full, one: full.at[:, dst].set(one[:, src]),
             batch_caches, row_caches)
 
-    # --------------------------------------------------------------- run
-    def run(self, requests: Sequence[Request], *,
-            pipeline: Optional[bool] = None) -> List:
-        from repro.serving.engine import GenerationResult, ReplayStream
+    # --------------------------------------------------------- lifecycle
+    def _ensure_started(self, *, num_slots: Optional[int] = None,
+                        slots_len: Optional[int] = None,
+                        pipeline: Optional[bool] = None) -> None:
+        if self._started:
+            return
+        from repro.serving.engine import ReplayStream
 
-        engine = self.engine
-        cfg = engine.cfg
-        if not requests:
-            return []
-        if any(r.temperature > 0.0 for r in requests):
-            warnings.warn("continuous batching decodes greedily; "
-                          "per-request temperature is ignored")
-        pipeline = self.scfg.pipeline if pipeline is None else pipeline
-        b = self._num_slots or min(len(requests),
-                                   self.scfg.num_slots)
-        b = max(1, min(b, len(requests)))
-        slots_len = self._slot_budget(requests)
-        chunk = engine.ecfg.decode_chunk
-        can_batch = self._can_batch_admissions()
-        orch = engine._make_orchestrator()  # ONE shared cache + clock
+        engine, cfg = self.engine, self.engine.cfg
+        self._pipeline = self.scfg.pipeline if pipeline is None else pipeline
+        b = num_slots or self._num_slots or self.scfg.num_slots
+        self._b = max(1, b)
+        self._slots_len = (slots_len or self.scfg.slots_len
+                           or cfg.sliding_window or cfg.max_seq_len)
+        self._chunk = engine.ecfg.decode_chunk
+        self._can_batch = self._can_batch_admissions()
+        self._orch = engine._make_orchestrator()  # ONE shared cache+clock
+        b = self._b
+        self._states: List[Optional[_SlotState]] = [None] * b
+        self._caches = init_decode_state(cfg, b, self._slots_len)
+        self._tok_d = jnp.zeros(b, jnp.int32)  # ON DEVICE between chunks
+        self._done = np.ones(b, bool)          # empty slots stay frozen
+        self._emitted = np.zeros(b, np.int32)
+        self._limits = np.zeros(b, np.int32)
+        self._eos = np.full(b, -1, np.int32)
+        # per-row sampling state (temperature 0 rows are greedy; the keys
+        # of greedy rows are never consumed)
+        self._temps = np.zeros(b, np.float32)
+        self._topks = np.zeros(b, np.int32)
+        self._keys = np.zeros((b, 2), np.uint32)
+        self._any_sampling = False
+        self._t0 = time.perf_counter()
+        self._stream = ReplayStream(pipelined=self._pipeline,
+                                    maxsize=self.scfg.max_inflight_chunks)
+        self._started = True
 
-        queue: Deque[Tuple[int, Request]] = deque(enumerate(requests))
-        results: List[Optional[GenerationResult]] = [None] * len(requests)
-        states: List[Optional[_SlotState]] = [None] * b
-        caches = init_decode_state(cfg, b, slots_len)
-        tok_d = jnp.zeros(b, jnp.int32)    # stays ON DEVICE between chunks
-        done = np.ones(b, bool)            # empty slots stay frozen
-        emitted = np.zeros(b, np.int32)
-        limits = np.zeros(b, np.int32)
-        eos = np.full(b, -1, np.int32)
-        t0 = time.perf_counter()
-        stream = ReplayStream(pipelined=pipeline,
-                              maxsize=self.scfg.max_inflight_chunks)
+    def flush(self) -> None:
+        """Block until every submitted replay job has run — i.e. every
+        request whose device work is complete has been finalized."""
+        if self._started:
+            self._stream.drain()
 
-        def finalize(st: _SlotState) -> None:
-            # replay-stream context: st's telemetry has fully drained
-            n_dec = max(len(st.tokens) - 1, 1)
-            results[st.index] = GenerationResult(
-                tokens=st.tokens,
-                ttft_s=float(st.ttft_s),
-                tpot_s=float(sum(st.step_totals) / n_dec),
-                wall_s=time.perf_counter() - st.admit_t,
-                queue_wait_s=st.queue_wait_s,
-                prefill_timing=st.prefill_timing,
-                decode_timings=st.decode_timings or None,
-                cache_stats=(dataclasses.asdict(orch.cache.stats)
-                             if orch else None),
-                prefill_weight_bytes=(st.prefill_weight_bytes
-                                      if orch else None),
-                decode_weight_bytes_per_tok=(
-                    st.decode_weight_bytes / n_dec
-                    if st.decode_timings else None))
+    def close(self) -> None:
+        """Tear the session down (stops the replay worker). Pending
+        un-finalized requests stay pending; call :meth:`flush` first."""
+        if self._started:
+            self._stream.close()
+        self.closed = True
 
-        def replay_prefill(wave: List[_SlotState], tele, per_row: bool
-                           ) -> None:
-            """Replay one admission wave's prefill telemetry, candidate by
-            candidate in pop order (the serial admission order), and
-            finalize the one-token requests."""
-            crit, act, pred = jax.device_get(tele)
-            for i, st in enumerate(wave):
-                if crit is None:
-                    c = a = p = None
-                elif per_row:   # (L, B, E) row-local leaves -> this row
-                    c, a, p = crit[:, i], act[:, i], pred[:, i]
-                else:           # solo admission: (L, E) leaves, B == 1
-                    c, a, p = crit, act, pred
-                timings, totals, wbytes = engine._replay(
-                    c, a, p, phase="prefill",
-                    s_ctx=np.asarray([st.prompt_len]), s_q=st.prompt_len,
-                    orch=orch)
-                st.ttft_s = (timings[0].total_s if timings else totals[0])
-                st.prefill_timing = timings[0] if timings else None
-                st.prefill_weight_bytes = wbytes
-                if st.finish_now:
-                    finalize(st)
+    def __enter__(self) -> "ContinuousBatchingScheduler":
+        return self
 
-        def replay_chunk(toks_ref, tele, rows) -> None:
-            """Fetch + replay one decode chunk's telemetry: the job the
-            pipeline overlaps with the NEXT chunk's device dispatch."""
-            toks_np, crit, act, pred = jax.device_get((toks_ref,) + tele)
-            toks_np = np.asarray(toks_np)
-            for r, st, keep, ctx0, is_done in rows:
-                if keep:   # this row's live steps are the chunk's first
-                    st.tokens.extend(int(t) for t in toks_np[:keep, r])
-                    # telemetry leaves are (T, L, B, E): this row's block
-                    timings, totals, wbytes = engine._replay(
-                        None if crit is None else crit[:keep, :, r],
-                        None if act is None else act[:keep, :, r],
-                        None if pred is None else pred[:keep, :, r],
-                        phase="decode",
-                        s_ctx=ctx0 + np.arange(keep), s_q=1, orch=orch)
-                    st.step_totals.extend(totals)
-                    st.decode_timings.extend(timings)
-                    st.decode_weight_bytes += wbytes
-                if is_done:
-                    finalize(st)
+    def __exit__(self, *exc) -> None:
+        if exc[0] is None:
+            self.flush()
+        self.close()
 
-        def admit_boundary() -> None:
-            """Fill every free slot from the FIFO queue.
+    # ------------------------------------------------------------ submit
+    def submit(self, request: Request, rng_key=None) -> RequestHandle:
+        """Queue one request for admission at the next chunk boundary and
+        return its :class:`RequestHandle`. Legal at ANY point in the
+        session's life — including while ``step()`` is being driven
+        (mid-run admission) — and from threads other than the driving
+        one: the shared queue is lock-guarded (only ``step()`` itself
+        must stay on a single thread).
 
-            Waves: up to ``len(free)`` queued requests prefill together
-            (one ragged row-local dispatch + ONE host sync for their first
-            tokens); requests that finish at their first token free their
-            claim immediately, so further waves run until the slots are
-            full or the queue drains — the same pop sequence the
-            one-at-a-time admission loop would make. Survivors are
-            scattered into their slots with one donated injection per
-            wave."""
-            nonlocal caches, tok_d
-            free = [r for r in range(b) if done[r] and states[r] is None]
-            if not free or not queue:
-                return
-            n_survivors = 0
-            waves = []   # (rcaches, src rows, first tokens, states)
-            while n_survivors < len(free) and queue:
-                room = len(free) - n_survivors
-                cands = []
-                while queue and len(cands) < room:
-                    cands.append(queue.popleft())
-                if not can_batch:
+        Sampling: the request's sampling params (validated at creation)
+        decides; the per-request PRNG stream root is ``rng_key`` if given,
+        else ``PRNGKey(request.seed)``. ``temperature > 0`` with neither
+        falls back to greedy with a warning (the documented
+        ``sample_token`` contract — a keyless request can't crash or
+        poison the slot batch)."""
+        if self.closed:
+            raise RuntimeError("serving session is closed")
+        self._ensure_started()
+        need = request.prompt_len + request.max_new_tokens
+        if self.engine.cfg.sliding_window is None and need > self._slots_len:
+            raise ValueError(
+                f"request needs {need} cache slots (prompt {request.prompt_len}"
+                f" + max_new {request.max_new_tokens}) but the session's "
+                f"slot budget is {self._slots_len}; open the session with a "
+                f"larger slots_len")
+        with self._lock:   # index -> request_id must be race-free too
+            h = RequestHandle(self, len(self._handles), request,
+                              time.perf_counter())
+            self._handles.append(h)
+        temp, top_k, key = resolve_sampling(request, rng_key,
+                                            context=h.request_id)
+        h.temperature, h.top_k = float(temp), int(top_k)
+        h.key = raw_key_data(key) if key is not None else None
+        if h.temperature > 0.0:
+            self._any_sampling = True
+        with self._lock:   # visible to admission only once fully set up
+            self._queue.append(h)
+        return h
+
+    # -------------------------------------------------------------- step
+    def step(self) -> bool:
+        """Advance the session by ONE chunk boundary: release cancelled
+        rows, admit queued requests into free slots, and (if any row is
+        live) dispatch one fused decode chunk + its replay job. Returns
+        True while the session is making progress; False when idle (no
+        queued, live, or cancelled work) — replay jobs may still be in
+        flight, :meth:`flush` waits for them."""
+        if self.closed:
+            raise RuntimeError("serving session is closed")
+        if not self._started:
+            return False
+        progress = self._sweep_cancelled()
+        progress |= self._admit_boundary()
+        if self._done.all():
+            return progress
+        self._dispatch_chunk()
+        return True
+
+    def _sweep_cancelled(self) -> bool:
+        """Free the slots (and queue positions) of cancelled requests and
+        finalize their partial results through the replay stream, AFTER
+        any already-dispatched chunks' tokens have drained into them."""
+        progress = False
+        dropped: List[RequestHandle] = []
+        with self._lock:
+            if any(h.cancel_requested for h in self._queue):
+                keep: Deque[RequestHandle] = deque()
+                for h in self._queue:
+                    if h.cancel_requested:
+                        dropped.append(h)
+                    else:
+                        keep.append(h)
+                self._queue = keep
+        for h in dropped:   # finalize outside the lock (may run inline)
+            self._stream.submit(partial(self._finalize_unadmitted, h))
+            progress = True
+        for r in range(self._b):
+            st = self._states[r]
+            if st is not None and st.handle.cancel_requested:
+                self._states[r] = None   # freed for the admission below
+                self._done[r] = True     # device row freezes from now on
+                self._stream.submit(
+                    partial(self._finalize, st, cancelled=True))
+                progress = True
+        return progress
+
+    # --------------------------------------------------------- admission
+    def _admit_boundary(self) -> bool:
+        """Fill every free slot from the FIFO queue.
+
+        Waves: up to ``len(free)`` queued requests prefill together
+        (one ragged row-local dispatch + ONE host sync for their first
+        tokens); requests that finish at their first token free their
+        claim immediately, so further waves run until the slots are
+        full or the queue drains — the same pop sequence the
+        one-at-a-time admission loop would make. Survivors are
+        scattered into their slots with one donated injection per
+        wave."""
+        engine, cfg = self.engine, self.engine.cfg
+        free = [r for r in range(self._b)
+                if self._done[r] and self._states[r] is None]
+        if not free or not self._queue:
+            return False
+        n_survivors = 0
+        waves = []   # (rcaches, src rows, first tokens, states)
+        while n_survivors < len(free) and self._queue:
+            room = len(free) - n_survivors
+            cands: List[RequestHandle] = []
+            with self._lock:
+                while self._queue and len(cands) < room:
+                    cands.append(self._queue.popleft())
+                if not self._can_batch:
                     cands, rest = cands[:1], cands[1:]
-                    for item in reversed(rest):
-                        queue.appendleft(item)
-                now = time.perf_counter()
-                lens = [len(req.prompt_tokens) for _, req in cands]
-                n = len(cands)
-                batched = n > 1
-                if batched:
-                    smax = max(lens)
-                    prompts = np.zeros((n, smax), np.int32)
-                    for i, (_, req) in enumerate(cands):
-                        prompts[i, smax - lens[i]:] = req.prompt_tokens
-                    logits, rcaches, info = engine._prefill(
-                        engine.params, tokens=jnp.asarray(prompts),
-                        qparams=engine.qparams, cache_slots=slots_len,
-                        lengths=jnp.asarray(lens, jnp.int32),
-                        row_local=True,
-                        # exact host-side solo capacities: the in-graph
-                        # f32 formula can truncate one slot differently
-                        row_capacities=jnp.asarray(
-                            [_capacity(cfg, s) for s in lens], jnp.int32)
-                        if cfg.is_moe else None)
-                else:  # exact-shape solo program (also the SSM/hybrid path)
-                    prompt = jnp.asarray(
-                        cands[0][1].prompt_tokens, jnp.int32)[None, :]
-                    logits, rcaches, info = engine._prefill(
-                        engine.params, tokens=prompt,
-                        qparams=engine.qparams, cache_slots=slots_len)
-                # the wave's ONE host sync: every candidate's first token
+                    for h in reversed(rest):
+                        self._queue.appendleft(h)
+            now = time.perf_counter()
+            lens = [h.request.prompt_len for h in cands]
+            n = len(cands)
+            batched = n > 1
+            if batched:
+                smax = max(lens)
+                prompts = np.zeros((n, smax), np.int32)
+                for i, h in enumerate(cands):
+                    prompts[i, smax - lens[i]:] = h.request.prompt_tokens
+                logits, rcaches, info = engine._prefill(
+                    engine.params, tokens=jnp.asarray(prompts),
+                    qparams=engine.qparams, cache_slots=self._slots_len,
+                    lengths=jnp.asarray(lens, jnp.int32),
+                    row_local=True,
+                    # exact host-side solo capacities: the in-graph
+                    # f32 formula can truncate one slot differently
+                    row_capacities=jnp.asarray(
+                        [_capacity(cfg, s) for s in lens], jnp.int32)
+                    if cfg.is_moe else None)
+            else:  # exact-shape solo program (also the SSM/hybrid path)
+                prompt = jnp.asarray(
+                    cands[0].request.prompt_tokens, jnp.int32)[None, :]
+                logits, rcaches, info = engine._prefill(
+                    engine.params, tokens=prompt,
+                    qparams=engine.qparams, cache_slots=self._slots_len)
+            # the wave's ONE host sync: every candidate's first token.
+            # Sampled candidates draw through the per-row sampler with
+            # fold count 0 — bit-identical to solo ``sample_token`` over
+            # the (1, V) row (greedy rows take the same argmax)
+            if any(h.temperature > 0.0 for h in cands):
+                keys = np.zeros((n, 2), np.uint32)
+                for i, h in enumerate(cands):
+                    if h.key is not None:
+                        keys[i] = h.key
+                keys0 = jax.vmap(lambda k: jax.random.fold_in(k, 0))(
+                    jnp.asarray(keys))
+                first = np.asarray(jax.device_get(sample_token_rows(
+                    logits, keys0,
+                    jnp.asarray([h.temperature for h in cands],
+                                jnp.float32),
+                    jnp.asarray([h.top_k for h in cands], jnp.int32))),
+                    np.int32)
+            else:
                 first = np.asarray(
                     jax.device_get(jnp.argmax(logits, axis=-1)), np.int32)
-                wave_states: List[_SlotState] = []
-                wave_src: List[int] = []
-                wave_tok: List[int] = []
-                wave_surv: List[_SlotState] = []
-                for i, (idx, req) in enumerate(cands):
-                    ft = int(first[i])
-                    st = _SlotState(
-                        index=idx, request=req, tokens=[ft],
-                        prompt_len=lens[i], admit_t=now,
-                        queue_wait_s=now - t0,
-                        finish_now=(req.max_new_tokens <= 1
-                                    or (req.eos_token is not None
-                                        and ft == req.eos_token)))
-                    wave_states.append(st)
-                    if not st.finish_now:
-                        wave_src.append(i)
-                        wave_tok.append(ft)
-                        wave_surv.append(st)
-                stream.submit(partial(
-                    replay_prefill, wave_states,
-                    (info.critical_masks, info.active_masks,
-                     info.predicted_next), batched))
-                if wave_src:
-                    waves.append((rcaches, wave_src, wave_tok, wave_surv))
-                    n_survivors += len(wave_src)
-            # survivors claim free slots in pop order (== the order the
-            # one-at-a-time admission loop would have filled them)
-            fi = 0
-            for rc, src, toks, sts in waves:
-                dst = free[fi:fi + len(src)]
-                fi += len(src)
-                for st, r in zip(sts, dst):
-                    states[r] = st
-                    done[r] = False
-                    emitted[r] = 1
-                    limits[r] = st.request.max_new_tokens
-                    eos[r] = (-1 if st.request.eos_token is None
-                              else st.request.eos_token)
-                caches = self._inject_rows(
-                    caches, rc, jnp.asarray(src, jnp.int32),
-                    jnp.asarray(dst, jnp.int32))
-                tok_d = tok_d.at[jnp.asarray(dst, jnp.int32)].set(
-                    jnp.asarray(toks, jnp.int32))
+            wave_states: List[_SlotState] = []
+            wave_src: List[int] = []
+            wave_tok: List[int] = []
+            wave_surv: List[_SlotState] = []
+            for i, h in enumerate(cands):
+                req = h.request
+                ft = int(first[i])
+                st = _SlotState(
+                    handle=h, request=req, tokens=[ft],
+                    prompt_len=lens[i], admit_t=now,
+                    queue_wait_s=now - h.submit_t,
+                    finish_now=(req.max_new_tokens <= 1
+                                or (req.eos_token is not None
+                                    and ft == req.eos_token)))
+                st.decode_t0 = time.perf_counter()
+                wave_states.append(st)
+                if not st.finish_now:
+                    wave_src.append(i)
+                    wave_tok.append(ft)
+                    wave_surv.append(st)
+            self._stream.submit(partial(
+                self._replay_prefill, wave_states,
+                (info.critical_masks, info.active_masks,
+                 info.predicted_next), batched))
+            # decode-wall clock: starts AFTER the prefill replay
+            # (inline in serial mode), mirroring solo generate's t_dec —
+            # so measured decode throughput excludes prefill + its replay
+            t_dec = time.perf_counter()
+            for st in wave_surv:
+                st.decode_t0 = t_dec
+            if wave_src:
+                waves.append((rcaches, wave_src, wave_tok, wave_surv))
+                n_survivors += len(wave_src)
+        # survivors claim free slots in pop order (== the order the
+        # one-at-a-time admission loop would have filled them)
+        fi = 0
+        for rc, src, toks, sts in waves:
+            dst = free[fi:fi + len(src)]
+            fi += len(src)
+            for st, r in zip(sts, dst):
+                h = st.handle
+                self._states[r] = st
+                self._done[r] = False
+                self._emitted[r] = 1
+                self._limits[r] = st.request.max_new_tokens
+                self._eos[r] = (-1 if st.request.eos_token is None
+                                else st.request.eos_token)
+                self._temps[r] = h.temperature
+                self._topks[r] = h.top_k
+                self._keys[r] = h.key if h.key is not None else 0
+            self._caches = self._inject_rows(
+                self._caches, rc, jnp.asarray(src, jnp.int32),
+                jnp.asarray(dst, jnp.int32))
+            self._tok_d = self._tok_d.at[jnp.asarray(dst, jnp.int32)].set(
+                jnp.asarray(toks, jnp.int32))
+        return True
 
-        n_chunks = 0
+    # ---------------------------------------------------------- dispatch
+    def _dispatch_chunk(self) -> None:
+        engine = self.engine
+        emitted_before = self._emitted.copy()
+        sample_kw = {}
+        if self._any_sampling:
+            # traced per-row arrays: mixed temperatures / top-k / keys
+            # never retrace; greedy-only sessions keep the leaner trace
+            sample_kw = dict(rng_keys=jnp.asarray(self._keys),
+                             temperatures=jnp.asarray(self._temps),
+                             top_ks=jnp.asarray(self._topks))
+        toks_d, self._caches, infos, done_d, emitted_d = \
+            engine._decode_batched(
+                engine.params, tokens=self._tok_d,
+                caches=self._caches, num_steps=self._chunk,
+                done=jnp.asarray(self._done),
+                n_emitted=jnp.asarray(self._emitted),
+                limits=jnp.asarray(self._limits),
+                eos_tokens=jnp.asarray(self._eos),
+                qparams=engine.qparams, **sample_kw)
+        self._tok_d = toks_d[-1]  # next chunk's data dep: ON DEVICE
+        # the boundary sync: ONLY the small (B,) masks cross —
+        # the (T, L, B, E) telemetry stays behind for the worker
+        done_h, emitted_h = jax.device_get((done_d, emitted_d))
+        self._done = np.array(done_h)  # device_get views are read-only
+        self._emitted = np.array(emitted_h)
+        rows = []
+        for r in range(self._b):
+            st = self._states[r]
+            if st is None:
+                continue
+            rows.append((r, st,
+                         int(self._emitted[r] - emitted_before[r]),
+                         st.prompt_len + int(emitted_before[r]),
+                         bool(self._done[r])))
+            if self._done[r]:
+                self._states[r] = None  # evict: free to admit; the
+                #                         worker finalizes st later
+        self._stream.submit(partial(
+            self._replay_chunk, toks_d,
+            (infos.critical_masks, infos.active_masks,
+             infos.predicted_next), rows))
+        self._n_chunks += 1
+
+    # ------------------------------------------------ replay-worker side
+    def _finalize(self, st: _SlotState, *, cancelled: bool = False) -> None:
+        # replay-stream context: st's telemetry has fully drained.
+        # ``cancelled`` comes from the PATH that finalized (the cancel
+        # sweep), not from the handle's flag — a cancel() that races a
+        # natural completion must not mislabel a complete result partial
+        from repro.serving.engine import GenerationResult
+
+        orch = self._orch
+        now = time.perf_counter()
+        n_dec = max(len(st.tokens) - 1, 1)
+        st.handle._finish(GenerationResult(
+            tokens=st.tokens,
+            ttft_s=float(st.ttft_s),
+            tpot_s=float(sum(st.step_totals) / n_dec),
+            wall_s=now - st.admit_t,
+            queue_wait_s=st.queue_wait_s,
+            decode_wall_s=now - st.decode_t0,
+            prefill_timing=st.prefill_timing,
+            decode_timings=st.decode_timings or None,
+            cache_stats=(dataclasses.asdict(orch.cache.stats)
+                         if orch else None),
+            prefill_weight_bytes=(st.prefill_weight_bytes
+                                  if orch else None),
+            decode_weight_bytes_per_tok=(
+                st.decode_weight_bytes / n_dec
+                if st.decode_timings else None),
+            cancelled=cancelled))
+
+    def _finalize_unadmitted(self, h: RequestHandle) -> None:
+        """A request cancelled while still queued: nothing ran for it."""
+        from repro.serving.engine import GenerationResult
+
+        h._finish(GenerationResult(
+            tokens=[], ttft_s=float("nan"), tpot_s=float("nan"),
+            wall_s=0.0, queue_wait_s=time.perf_counter() - h.submit_t,
+            cancelled=True))
+
+    def _replay_prefill(self, wave: List[_SlotState], tele, per_row: bool
+                        ) -> None:
+        """Replay one admission wave's prefill telemetry, candidate by
+        candidate in pop order (the serial admission order), emit each
+        candidate's prefill TokenChunk, and finalize the one-token
+        requests."""
+        engine = self.engine
+        crit, act, pred = jax.device_get(tele)
+        for i, st in enumerate(wave):
+            if crit is None:
+                c = a = p = None
+            elif per_row:   # (L, B, E) row-local leaves -> this row
+                c, a, p = crit[:, i], act[:, i], pred[:, i]
+            else:           # solo admission: (L, E) leaves, B == 1
+                c, a, p = crit, act, pred
+            timings, totals, wbytes = engine._replay(
+                c, a, p, phase="prefill",
+                s_ctx=np.asarray([st.prompt_len]), s_q=st.prompt_len,
+                orch=self._orch)
+            st.ttft_s = (timings[0].total_s if timings else totals[0])
+            st.prefill_timing = timings[0] if timings else None
+            st.prefill_weight_bytes = wbytes
+            st.handle._push_event(TokenChunk(
+                request_id=st.handle.request_id, phase="prefill",
+                tokens=[st.tokens[0]], modeled_s=float(st.ttft_s)))
+            if st.finish_now:
+                self._finalize(st)
+
+    def _replay_chunk(self, toks_ref, tele, rows) -> None:
+        """Fetch + replay one decode chunk's telemetry: the job the
+        pipeline overlaps with the NEXT chunk's device dispatch."""
+        engine = self.engine
+        toks_np, crit, act, pred = jax.device_get((toks_ref,) + tele)
+        toks_np = np.asarray(toks_np)
+        for r, st, keep, ctx0, is_done in rows:
+            if keep:   # this row's live steps are the chunk's first
+                new = [int(t) for t in toks_np[:keep, r]]
+                st.tokens.extend(new)
+                # telemetry leaves are (T, L, B, E): this row's block
+                timings, totals, wbytes = engine._replay(
+                    None if crit is None else crit[:keep, :, r],
+                    None if act is None else act[:keep, :, r],
+                    None if pred is None else pred[:keep, :, r],
+                    phase="decode",
+                    s_ctx=ctx0 + np.arange(keep), s_q=1, orch=self._orch)
+                st.step_totals.extend(totals)
+                st.decode_timings.extend(timings)
+                st.decode_weight_bytes += wbytes
+                st.handle._push_event(TokenChunk(
+                    request_id=st.handle.request_id, phase="decode",
+                    tokens=new, modeled_s=float(sum(totals))))
+            if is_done:
+                self._finalize(st)
+
+    # --------------------------------------------------------------- run
+    def run(self, requests: Sequence[Request], *,
+            pipeline: Optional[bool] = None,
+            rng_keys: Optional[Sequence] = None) -> List:
+        """Batch wrapper over the step API: submit every request, loop
+        :meth:`step` until idle, :meth:`flush` the replay stream, return
+        the results in submission order. ``rng_keys`` optionally gives
+        request i an explicit PRNG root (overriding its seed)."""
+        if not requests:
+            return []
+        b = self._num_slots or min(len(requests), self.scfg.num_slots)
+        b = max(1, min(b, len(requests)))
+        self._ensure_started(num_slots=b,
+                             slots_len=self._slot_budget(requests),
+                             pipeline=pipeline)
+        handles = [self.submit(r, rng_key=rng_keys[i] if rng_keys else None)
+                   for i, r in enumerate(requests)]
+        chunk = self.engine.ecfg.decode_chunk
         max_chunks = self.scfg.max_chunks or (
             sum(-(-max(r.max_new_tokens - 1, 0) // chunk)
                 for r in requests) + len(requests) + 1)
         try:
-            while queue or not done.all():
-                admit_boundary()      # admission at the chunk boundary
-                if done.all():
-                    continue          # drained mid-admission (1-token reqs)
-                emitted_before = emitted.copy()
-                toks_d, caches, infos, done_d, emitted_d = \
-                    engine._decode_batched(
-                        engine.params, tokens=tok_d,
-                        caches=caches, num_steps=chunk,
-                        done=jnp.asarray(done),
-                        n_emitted=jnp.asarray(emitted),
-                        limits=jnp.asarray(limits),
-                        eos_tokens=jnp.asarray(eos),
-                        qparams=engine.qparams)
-                tok_d = toks_d[-1]    # next chunk's data dep: ON DEVICE
-                # the boundary sync: ONLY the small (B,) masks cross —
-                # the (T, L, B, E) telemetry stays behind for the worker
-                done_h, emitted_h = jax.device_get((done_d, emitted_d))
-                done = np.array(done_h)   # device_get views are read-only
-                emitted = np.array(emitted_h)
-                rows = []
-                for r in range(b):
-                    st = states[r]
-                    if st is None:
-                        continue
-                    rows.append((r, st,
-                                 int(emitted[r] - emitted_before[r]),
-                                 st.prompt_len + int(emitted_before[r]),
-                                 bool(done[r])))
-                    if done[r]:
-                        states[r] = None  # evict: free to admit; the
-                        #                   worker finalizes st later
-                stream.submit(partial(
-                    replay_chunk, toks_d,
-                    (infos.critical_masks, infos.active_masks,
-                     infos.predicted_next), rows))
-                n_chunks += 1
-                assert n_chunks <= max_chunks, \
-                    f"scheduler made no progress after {n_chunks} chunks"
-            stream.drain()
+            while self.step():
+                assert self._n_chunks <= max_chunks, \
+                    f"scheduler made no progress after {self._n_chunks} chunks"
+            self.flush()
         finally:
-            stream.close()
-        assert all(res is not None for res in results)
-        return results
+            self.close()
+        assert all(h.done for h in handles)
+        return [h._result for h in handles]

@@ -1,0 +1,306 @@
+"""Step-driven serving API: ``submit`` / ``step`` / ``stream`` /
+``cancel`` with per-request sampling and mid-run admission.
+
+The contracts under test:
+
+  * sampled-token BIT-PARITY — a request with ``SamplingParams``
+    (temperature / top-k / seed) produces identical tokens through solo
+    ``generate_reference`` (the fused no-scheduler oracle), the
+    ``generate`` wrapper, the static lockstep batch (full-precision
+    row-independent regime) and continuous batching (pipelined AND
+    serial), because every path indexes the request's counter-derived
+    ``fold_in`` PRNG stream by token position and samples over
+    bit-identical row logits;
+  * invariance of the per-row PRNG streams to ``decode_chunk``, slot
+    count and admission order;
+  * lifecycle — requests submitted WHILE ``step()`` is being driven are
+    admitted at the next boundary; ``cancel`` frees the slot at the next
+    boundary and yields a partial result; ``stream`` delivers TokenChunk
+    events in replay (finalize) order;
+  * ``generate``/``generate_batch`` remain bit-exact wrappers over the
+    step API, and malformed sampling params fail at Request creation.
+"""
+import dataclasses
+
+import jax
+import numpy as np
+import pytest
+
+from repro.models import init_params
+from repro.models.config import DyMoEPolicy, ModelConfig
+from repro.serving import DyMoEEngine, EngineConfig, Request, \
+    SamplingParams
+from repro.serving.cost_model import EdgeProfile
+
+
+@pytest.fixture(scope="module")
+def moe_setup():
+    cfg = ModelConfig(
+        name="t", arch_type="moe", num_layers=3, d_model=64, vocab_size=512,
+        num_heads=4, num_kv_heads=2, head_dim=16, num_experts=8,
+        num_experts_per_tok=2, moe_d_ff=64, capacity_factor=4.0,
+        dtype="float32", remat="none",
+        dymoe=DyMoEPolicy(low_bits=2, retention=0.75))
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    return cfg, params
+
+
+@pytest.fixture(scope="module")
+def eng(moe_setup):
+    cfg, params = moe_setup
+    return DyMoEEngine(cfg, params, EngineConfig(
+        profile=EdgeProfile().with_vram(16), decode_chunk=4))
+
+
+def _sampled_requests(rng, specs):
+    """specs: (prompt_len, max_new, temperature, top_k, seed)."""
+    return [Request(prompt_tokens=rng.integers(1, 512, n).tolist(),
+                    max_new_tokens=m, temperature=t, top_k=k, seed=s)
+            for n, m, t, k, s in specs]
+
+
+SPECS = [(12, 9, 0.8, 4, 11), (7, 5, 0.0, 0, None),
+         (9, 14, 1.2, 0, 7), (12, 3, 0.7, 2, 23), (5, 11, 0.6, 3, 3)]
+
+
+# ------------------------------------------------------- sampled parity
+
+
+def test_sampled_continuous_matches_reference_bitwise(eng):
+    """THE sampling acceptance criterion: a mixed greedy/sampled ragged
+    stream served through the slot batch produces, per request, exactly
+    the tokens the solo fused reference path samples — pipelined and
+    serial — with finite modeled TTFT/TPOT."""
+    rng = np.random.default_rng(5)
+    reqs = _sampled_requests(rng, SPECS)
+    refs = [eng.generate_reference(r) for r in reqs]
+    assert any(len(set(r.tokens)) > 1 for r in refs)  # not degenerate
+    for pipe in (False, True):
+        out = eng.generate_batch(reqs, num_slots=2, pipeline=pipe)
+        for req, res, ref in zip(reqs, out, refs):
+            assert res.tokens == ref.tokens, (pipe, req.seed)
+            assert np.isfinite(res.ttft_s) and np.isfinite(res.tpot_s)
+
+
+def test_generate_wrapper_bit_exact_vs_reference(eng):
+    """``generate`` is a thin wrapper over the step API and must match
+    the fused reference path bit-for-bit — greedy and sampled, tokens AND
+    modeled numbers (TTFT/TPOT/cache stats/weight bytes)."""
+    rng = np.random.default_rng(9)
+    for req in _sampled_requests(rng, [(10, 8, 0.0, 0, None),
+                                       (8, 7, 0.9, 5, 41)]):
+        ref = eng.generate_reference(req)
+        res = eng.generate(req)
+        assert res.tokens == ref.tokens
+        assert res.ttft_s == ref.ttft_s
+        assert res.tpot_s == ref.tpot_s
+        assert res.cache_stats == ref.cache_stats
+        assert res.prefill_weight_bytes == ref.prefill_weight_bytes
+        assert res.decode_weight_bytes_per_tok == \
+            ref.decode_weight_bytes_per_tok
+
+
+def test_sampled_chunk_and_slot_invariance(moe_setup):
+    """Counter-derived per-row PRNG streams make sampled outputs
+    invariant to the decode chunking AND the slot count (i.e. to how
+    requests are packed into the batch over time)."""
+    cfg, params = moe_setup
+    rng = np.random.default_rng(13)
+    reqs = _sampled_requests(rng, SPECS)
+    base = None
+    for chunk in (1, 3, 16):
+        e = DyMoEEngine(cfg, params, EngineConfig(decode_chunk=chunk))
+        for slots in (1, 3):
+            toks = [r.tokens
+                    for r in e.generate_batch(reqs, num_slots=slots)]
+            if base is None:
+                base = toks
+            assert toks == base, (chunk, slots)
+
+
+def test_sampled_admission_order_invariance(eng):
+    """A request's PRNG stream is its own (seed + per-row token counter):
+    submitting the same requests in a different order changes admission
+    order and slot placement but not any request's sampled tokens."""
+    rng = np.random.default_rng(17)
+    reqs = _sampled_requests(rng, SPECS)
+    fwd = eng.generate_batch(reqs, num_slots=2)
+    perm = [3, 1, 4, 0, 2]
+    rev = eng.generate_batch([reqs[i] for i in perm], num_slots=2)
+    for j, i in enumerate(perm):
+        assert rev[j].tokens == fwd[i].tokens, i
+
+
+def test_sampled_static_matches_reference(moe_setup):
+    """The static lockstep batch honors per-request sampling. Bit-parity
+    with the solo reference holds in the row-independent full-precision
+    regime (the quantized static path couples rows through its
+    batch-mean Critical set by design)."""
+    cfg, params = moe_setup
+    e = DyMoEEngine(cfg, params, EngineConfig(use_dymoe=False,
+                                              decode_chunk=4))
+    rng = np.random.default_rng(21)
+    reqs = _sampled_requests(rng, SPECS)
+    refs = [e.generate_reference(r) for r in reqs]
+    stat = e.generate_batch(reqs, static=True)
+    cont = e.generate_batch(reqs, num_slots=2)
+    for res, res_c, ref in zip(stat, cont, refs):
+        assert res.tokens == ref.tokens
+        assert res_c.tokens == ref.tokens
+
+
+def test_generate_batch_rng_key_substreams(eng):
+    """generate_batch(rng_key=k) gives seedless sampled request i the
+    stream root fold_in(k, i): distinct per request, bit-identical to a
+    solo generate with that folded key, and a request's own seed wins."""
+    key = jax.random.PRNGKey(5)
+    reqs = [Request(prompt_tokens=list(range(1, 9)), max_new_tokens=6,
+                    temperature=0.9, top_k=3) for _ in range(2)]
+    out = eng.generate_batch(reqs, rng_key=key, num_slots=2)
+    for i, (req, res) in enumerate(zip(reqs, out)):
+        solo = eng.generate(req, rng_key=jax.random.fold_in(key, i))
+        assert res.tokens == solo.tokens, i
+    assert out[0].tokens != out[1].tokens   # distinct streams
+
+
+def test_keyless_sampled_request_falls_back_greedy(eng):
+    """temperature > 0 with neither seed nor rng_key warns and decodes
+    greedily — a keyless request can't crash or poison the slot batch."""
+    req = Request(prompt_tokens=list(range(1, 11)), max_new_tokens=6)
+    greedy = eng.generate(req)
+    with pytest.warns(UserWarning, match="greedy"):
+        res = eng.generate(dataclasses.replace(
+            req, temperature=1.0, sampling=None))
+    assert res.tokens == greedy.tokens
+
+
+# ------------------------------------------------------------ lifecycle
+
+
+def test_midrun_admission_parity(eng):
+    """Requests submitted WHILE step() is being driven are admitted at
+    the next chunk boundary into freed slots, with tokens bit-identical
+    to their solo runs — the open-loop contract."""
+    rng = np.random.default_rng(25)
+    reqs = _sampled_requests(rng, SPECS)
+    refs = [eng.generate_reference(r) for r in reqs]
+    sess = eng.serve(num_slots=2, pipeline=True, slots_len=64)
+    handles = [sess.submit(reqs[0]), sess.submit(reqs[1])]
+    assert eng.step()            # first boundary: both admitted
+    assert eng.step()
+    for r in reqs[2:]:           # mid-run: the session is hot
+        handles.append(eng.submit(r))
+    results = [h.result() for h in handles]
+    sess.flush()
+    sess.close()
+    for res, ref in zip(results, refs):
+        assert res.tokens == ref.tokens
+        assert np.isfinite(res.ttft_s) and np.isfinite(res.tpot_s)
+    # FIFO queue waits for the mid-run batch
+    waits = [r.queue_wait_s for r in results[2:]]
+    assert all(w >= 0 for w in waits)
+
+
+def test_cancel_frees_slot_and_returns_partial(eng):
+    """cancel() on an active request frees its slot at the next boundary
+    and finalizes a PARTIAL result whose tokens are a prefix of the solo
+    run; a queued request then rotates into the freed slot."""
+    long = Request(prompt_tokens=list(range(1, 9)), max_new_tokens=60)
+    short = Request(prompt_tokens=list(range(2, 10)), max_new_tokens=5)
+    solo_long = eng.generate(long)
+    solo_short = eng.generate(short)
+    sess = eng.serve(num_slots=1, pipeline=False, slots_len=80)
+    hl = sess.submit(long)
+    hs = sess.submit(short)      # waits: one slot, occupied by `long`
+    sess.step()
+    sess.step()
+    hl.cancel()
+    res_s = hs.result()          # drives: cancel sweep -> admission
+    res_l = hl.result()
+    sess.flush()
+    sess.close()
+    assert res_l.cancelled
+    assert 1 <= len(res_l.tokens) < 60
+    assert res_l.tokens == solo_long.tokens[:len(res_l.tokens)]
+    assert not res_s.cancelled
+    assert res_s.tokens == solo_short.tokens
+    assert np.isfinite(res_l.tpot_s)   # partial accounting still real
+
+
+def test_cancel_queued_request_never_runs(eng):
+    """cancel() before admission drops the request from the queue: empty
+    partial result, and no slot was ever consumed for it."""
+    a = Request(prompt_tokens=list(range(1, 9)), max_new_tokens=6)
+    b = Request(prompt_tokens=list(range(3, 11)), max_new_tokens=6)
+    sess = eng.serve(num_slots=1, pipeline=False, slots_len=32)
+    ha = sess.submit(a)
+    hb = sess.submit(b)
+    hb.cancel()
+    res_a = ha.result()
+    res_b = hb.result()
+    sess.close()
+    assert res_b.cancelled and res_b.tokens == []
+    assert res_a.tokens == eng.generate(a).tokens
+
+
+def test_stream_events_match_finalize_order(eng):
+    """handle.stream() yields TokenChunk events in replay order — one
+    prefill event then one event per decode chunk with live steps — and
+    their concatenated tokens equal result().tokens exactly."""
+    req = Request(prompt_tokens=list(range(1, 12)), max_new_tokens=10,
+                  temperature=0.9, top_k=4, seed=5)
+    ref = eng.generate(req)
+    sess = eng.serve(num_slots=1, pipeline=True, slots_len=32)
+    h = sess.submit(req)
+    events = list(h.stream())    # drives the session itself
+    res = h.result()
+    sess.close()
+    assert res.tokens == ref.tokens
+    assert [t for ev in events for t in ev.tokens] == res.tokens
+    assert events[0].phase == "prefill" and len(events[0].tokens) == 1
+    assert all(ev.phase == "decode" for ev in events[1:])
+    assert all(ev.modeled_s >= 0 and np.isfinite(ev.modeled_s)
+               for ev in events)
+    # chunked delivery: decode events carry at most decode_chunk tokens
+    assert all(1 <= len(ev.tokens) <= eng.ecfg.decode_chunk
+               for ev in events[1:])
+
+
+def test_submit_rejects_oversized_request(eng):
+    sess = eng.serve(num_slots=1, slots_len=16)
+    with pytest.raises(ValueError, match="slot budget"):
+        sess.submit(Request(prompt_tokens=list(range(1, 14)),
+                            max_new_tokens=8))
+    sess.close()
+
+
+# ----------------------------------------------------------- validation
+
+
+def test_sampling_params_validated_at_request_creation():
+    with pytest.raises(ValueError, match="temperature"):
+        Request(prompt_tokens=[1], temperature=-0.5)
+    with pytest.raises(ValueError, match="top_k"):
+        Request(prompt_tokens=[1], top_k=-1)
+    with pytest.raises(ValueError, match="temperature"):
+        SamplingParams(temperature=float("nan"))
+    # SamplingParams at construction overwrites the flat fields, which
+    # are the single source of truth afterwards
+    r = Request(prompt_tokens=[1],
+                sampling=SamplingParams(temperature=0.5, top_k=3, seed=9))
+    assert (r.temperature, r.top_k, r.seed) == (0.5, 3, 9)
+    r2 = Request(prompt_tokens=[1], temperature=0.7, seed=2)
+    assert r2.sampling_params == SamplingParams(temperature=0.7, top_k=0,
+                                                seed=2)
+    # sampling is an InitVar (never re-passed by replace), so BOTH
+    # replace directions are unambiguous: a flat-field replace...
+    r3 = dataclasses.replace(r2, temperature=1.1)
+    assert r3.sampling_params == SamplingParams(temperature=1.1, top_k=0,
+                                                seed=2)
+    # ...and a whole-bundle replace (stale flat fields are overwritten)
+    r4 = dataclasses.replace(r2, sampling=SamplingParams(temperature=0.4,
+                                                         seed=8))
+    assert r4.sampling_params == SamplingParams(temperature=0.4, top_k=0,
+                                                seed=8)
+    with pytest.raises(ValueError, match="temperature"):
+        dataclasses.replace(r2, temperature=-1.0)
