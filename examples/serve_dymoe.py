@@ -7,7 +7,12 @@
      receives traffic — staggered ``submit`` while ``step()`` is running
      (mid-run admission into freed slots), per-request sampling
      (temperature / top-k / seed), streamed TokenChunk events, and a
-     mid-flight ``cancel``.
+     mid-flight ``cancel``;
+  3. exercise the FAULT-TOLERANT serving contract: a bounded queue with
+     typed ``QueueFull`` backpressure (+ ``submit_with_retry``),
+     wall-clock deadline shedding, an injected replay fault the session
+     survives in degraded mode, and a ``close()`` that resolves every
+     outstanding handle with ``SessionClosed``.
 
     PYTHONPATH=src python examples/serve_dymoe.py
 """
@@ -18,8 +23,8 @@ import jax
 from repro.configs import get_config
 from repro.models import init_params
 from repro.models.config import DyMoEPolicy
-from repro.serving import DyMoEEngine, EngineConfig, Request, \
-    SamplingParams
+from repro.serving import DyMoEEngine, EngineConfig, FaultInjector, \
+    FaultSpec, Request, SamplingParams, ServingError, submit_with_retry
 from repro.serving.cost_model import EdgeProfile
 
 
@@ -95,11 +100,53 @@ def step_driven_loop(cfg, params):
     print("sampled tokens bit-identical to a solo run of the same seed")
 
 
+def fault_tolerant_loop(cfg, params):
+    """Robust serving: backpressure, deadlines, and surviving a fault."""
+    print("\n--- fault-tolerant serving: backpressure/deadlines/faults ---")
+    # a deterministic injected fault: the SECOND decode-chunk replay job
+    # raises, as a crashed host-side telemetry replay would
+    eng = DyMoEEngine(cfg, params, EngineConfig(
+        profile=EdgeProfile().with_vram(12), decode_chunk=4),
+        faults=FaultInjector([FaultSpec(site="replay.chunk", at=1)]))
+    session = eng.serve(num_slots=2, slots_len=96, max_queue=3)
+
+    def req(i, deadline_s=None):
+        return Request(prompt_tokens=list(range(1 + i, 25 + i)),
+                       max_new_tokens=8, request_id=f"req-{i}",
+                       deadline_s=deadline_s)
+
+    # bounded queue: the 4th+ queued submit gets QueueFull backpressure;
+    # submit_with_retry(drive=True) steps the session until room frees
+    handles = [submit_with_retry(session, req(i), drive=True)
+               for i in range(6)]
+    # a request with an already-hopeless deadline is shed, never admitted
+    handles.append(session.submit(req(99, deadline_s=0.0)))
+    session.drain(cancel_queued=False)   # resolve everything we can
+    health = session.health()
+    session.close()                      # leftovers -> SessionClosed
+    for h in handles:
+        if h.error is not None:
+            print(f"{h.request_id}: {type(h.error).__name__}: {h.error}")
+        else:
+            r = h.result()
+            print(f"{h.request_id}: {len(r.tokens):2d} tok "
+                  f"TTFT={r.ttft_s * 1e6:9.1f}us")
+    print(f"health: status={health.status} "
+          f"replay_faults={health.replay_faults} "
+          f"queue_rejections={health.queue_rejections} "
+          f"deadline_shed={health.deadline_shed}")
+    assert health.status == "degraded"       # fault fired, session lived
+    assert all(h.done for h in handles)      # EVERY handle resolved
+    assert any(isinstance(h.error, ServingError) for h in handles)
+    print("every handle resolved; session served on, degraded")
+
+
 def main():
     cfg = get_config("qwen2-moe-a2.7b").reduced()
     params = init_params(cfg, jax.random.PRNGKey(0))
     ablation_table(cfg, params)
     step_driven_loop(cfg, params)
+    fault_tolerant_loop(cfg, params)
 
 
 if __name__ == "__main__":

@@ -61,15 +61,25 @@ class MixedPrecisionLRUCache:
     """Byte-budgeted LRU over (layer, expert) -> single-precision residency."""
 
     def __init__(self, capacity_bytes: int,
-                 loader: Optional[Callable[[Key, str], Tuple[object, int]]] = None):
+                 loader: Optional[Callable[[Key, str], Tuple[object, int]]] = None,
+                 faults=None):
         """loader(key, precision) -> (payload, nbytes). In simulation mode
-        (loader=None) the caller passes nbytes explicitly to get/prefetch."""
+        (loader=None) the caller passes nbytes explicitly to get/prefetch.
+
+        ``faults``: optional :class:`repro.serving.faults.FaultInjector`
+        (duck-typed — this module never imports the serving layer). Two
+        sites: ``cache.blob.corrupt`` raises on a demand load (a corrupted
+        transfer), ``cache.blob.oversize`` inflates a loaded blob's size
+        (driving the bypass ladder below)."""
         self.capacity = int(capacity_bytes)
         self._loader = loader
+        self._faults = faults
         self._entries: "OrderedDict[Key, CacheEntry]" = OrderedDict()
         self._used = 0
         self.stats = CacheStats()
-        self._warned_bypass = False
+        # oversized-blob warnings are rate-limited to ONE per blob key —
+        # the per-load count lives in stats.bypass_loads, not the log
+        self._warned_bypass: set = set()
 
     # ------------------------------------------------------------ helpers
     def __contains__(self, key: Key) -> bool:
@@ -128,13 +138,17 @@ class MixedPrecisionLRUCache:
         VRAM budget would turn a capacity-planning problem into an outage;
         instead the load is charged in full as missed bytes every time
         (never resident => never a hit), counted in ``stats.bypass_loads``,
-        and flagged once with a warning."""
-        if not self._warned_bypass:
+        and flagged with ONE warning per blob key (repeat loads of the
+        same blob are silent — the count lives in the stats, not the
+        log)."""
+        if key not in self._warned_bypass:
             warnings.warn(
                 f"expert blob {key} ({size}B) exceeds the entire cache "
                 f"budget ({self.capacity}B); degrading to bypass loads — "
-                "every request for it pays the full transfer")
-            self._warned_bypass = True
+                "every request for it pays the full transfer (counted in "
+                "stats.bypass_loads; further loads of this blob won't "
+                "warn)")
+            self._warned_bypass.add(key)
         self.stats.bypass_loads += 1
         return CacheEntry(key, precision, size, payload)
 
@@ -152,7 +166,12 @@ class MixedPrecisionLRUCache:
             self._touch(key)
             return cur, 0
         self.stats.misses += 1
+        if self._faults is not None:   # chaos suite: corrupted transfer
+            self._faults.fire("cache.blob.corrupt", key=key,
+                              precision=precision)
         payload, size = self._load(key, precision, nbytes)
+        if self._faults is not None:   # chaos suite: oversized blob
+            size = self._faults.inflate("cache.blob.oversize", size)
         self.stats.bytes_loaded += size
         if size > self.capacity:
             # unadmittable high blob: stream it through but KEEP any
@@ -194,6 +213,8 @@ class MixedPrecisionLRUCache:
             self._touch(key)
             return 0
         payload, size = self._load(key, precision, nbytes)
+        if self._faults is not None:
+            size = self._faults.inflate("cache.blob.oversize", size)
         if size > self.capacity:
             return 0  # keep any lower-precision copy — better than nothing
         if cur is not None:

@@ -102,7 +102,9 @@ class StepTiming:
 
 
 class DynamicExpertOrchestrator:
-    def __init__(self, cfg: OrchestratorConfig):
+    def __init__(self, cfg: OrchestratorConfig, faults=None):
+        # ``faults``: optional FaultInjector threaded into the cache's
+        # blob-load sites (chaos testing; None = untouched hot path)
         self.cfg = cfg
         capacity = cfg.vram_budget_bytes
         if not cfg.enable_cache:
@@ -110,7 +112,7 @@ class DynamicExpertOrchestrator:
             # with >= 2 layers nothing survives until the same layer recurs
             # (paper ablation row 1).
             capacity = cfg.bytes_high * cfg.num_experts
-        self.cache = MixedPrecisionLRUCache(capacity)
+        self.cache = MixedPrecisionLRUCache(capacity, faults=faults)
         self._dma_tail = 0.0
         self._now = 0.0
         # (layer, expert) -> modeled DMA completion time of an issued

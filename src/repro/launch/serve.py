@@ -11,6 +11,14 @@ Open serving loop (``--requests N``): requests are SUBMITTED while the
 engine is being stepped — half up front, the rest mid-run after a few
 chunk boundaries (bursty-arrival shape) — and the last request's tokens
 are streamed as TokenChunk events while its replay finalizes.
+
+Robust serving knobs: ``--max-queue`` bounds the admission queue
+(submits past it hit typed ``QueueFull`` backpressure and are retried
+with backoff while the loop keeps stepping), ``--deadline-s`` gives every
+request a wall-clock deadline (queued requests past it are shed with
+``DeadlineExceeded``; in-flight ones are evicted with a partial result).
+Ctrl-C drains gracefully: in-flight requests finish, queued ones are
+cancelled, results collected — a second Ctrl-C aborts the drain.
 """
 from __future__ import annotations
 
@@ -24,7 +32,7 @@ from repro.configs import get_config
 from repro.models import init_params
 from repro.models.config import DyMoEPolicy
 from repro.serving import DyMoEEngine, EngineConfig, Request, \
-    SamplingParams
+    SamplingParams, submit_with_retry
 from repro.serving.cost_model import EdgeProfile
 
 
@@ -48,6 +56,14 @@ def main() -> None:
                          "submissions and streamed tokens")
     ap.add_argument("--num-slots", type=int, default=2,
                     help="device slots for the open serving loop")
+    ap.add_argument("--max-queue", type=int, default=None,
+                    help="bound the admission queue: submits past it get "
+                         "typed QueueFull backpressure (retried here with "
+                         "backoff while the loop keeps stepping)")
+    ap.add_argument("--deadline-s", type=float, default=None,
+                    help="per-request wall-clock deadline: queued past it "
+                         "-> shed (DeadlineExceeded); in flight past it "
+                         "-> evicted with a partial result")
     ap.add_argument("--reduced", action="store_true", default=True)
     ap.add_argument("--full", dest="reduced", action="store_false")
     ap.add_argument("--no-cache", action="store_true")
@@ -79,7 +95,8 @@ def main() -> None:
         return Request(prompt_tokens=list(range(1 + i, args.prompt_len
                                                 + 1 + i)),
                        max_new_tokens=args.max_new, sampling=sp,
-                       request_id=f"req-{i}")
+                       request_id=f"req-{i}",
+                       deadline_s=args.deadline_s)
 
     if args.requests <= 1:
         res = engine.generate(request(0))
@@ -94,29 +111,51 @@ def main() -> None:
     # ---- open serving loop: staggered submissions + streamed tokens
     session = engine.serve(num_slots=args.num_slots,
                            slots_len=args.prompt_len + args.max_new
-                           + args.requests)
-    n_first = max(1, args.requests // 2)
-    handles = [session.submit(request(i)) for i in range(n_first)]
-    for _ in range(2):           # the engine is already decoding...
-        engine.step()
-    for i in range(n_first, args.requests):   # ...when the burst arrives
-        handles.append(engine.submit(request(i)))
-    print(f"# streaming {handles[-1].request_id} "
-          f"(submitted mid-run, admitted into a freed slot):")
-    for ev in handles[-1].stream():
-        print(f"  {ev.phase:8s} +{len(ev.tokens):2d} tok "
-              f"modeled {ev.modeled_s * 1e3:8.3f} ms  {ev.tokens}")
-    results = [h.result() for h in handles]
-    session.flush()
-    session.close()
+                           + args.requests,
+                           max_queue=args.max_queue)
+    handles = []
+    try:
+        n_first = max(1, args.requests // 2)
+        for i in range(n_first):
+            handles.append(submit_with_retry(session, request(i),
+                                             drive=True))
+        for _ in range(2):       # the engine is already decoding...
+            engine.step()
+        for i in range(n_first, args.requests):  # ...the burst arrives
+            handles.append(submit_with_retry(session, request(i),
+                                             drive=True))
+        print(f"# streaming {handles[-1].request_id} "
+              f"(submitted mid-run, admitted into a freed slot):")
+        for ev in handles[-1].stream():
+            print(f"  {ev.phase:8s} +{len(ev.tokens):2d} tok "
+                  f"modeled {ev.modeled_s * 1e3:8.3f} ms  {ev.tokens}")
+        session.drain(cancel_queued=False)   # resolve every handle
+    except KeyboardInterrupt:
+        # graceful Ctrl-C: finish what's in flight, cancel what's still
+        # queued, then report — a second Ctrl-C interrupts the drain too
+        print("\n# Ctrl-C: draining in-flight requests "
+              "(Ctrl-C again to abort the drain)...")
+        session.drain()
+    finally:
+        health = session.health()
+        session.close()   # any still-unresolved handle -> SessionClosed
+
+    def row(h):
+        if h.error is not None:
+            return dict(id=h.request_id, error=type(h.error).__name__)
+        r = h.result()
+        return dict(id=h.request_id, ttft_ms=r.ttft_s * 1e3,
+                    tpot_ms=r.tpot_s * 1e3,
+                    queue_wait_ms=(r.queue_wait_s or 0) * 1e3,
+                    cancelled=r.cancelled,
+                    deadline_expired=r.deadline_expired,
+                    tokens=r.tokens[:8])
+
     print(json.dumps(dict(
         arch=cfg.name, mode=args.mode, vram_gb=args.vram_gb,
-        num_slots=args.num_slots, requests=[
-            dict(id=h.request_id, ttft_ms=r.ttft_s * 1e3,
-                 tpot_ms=r.tpot_s * 1e3, queue_wait_ms=(r.queue_wait_s
-                                                        or 0) * 1e3,
-                 tokens=r.tokens[:8])
-            for h, r in zip(handles, results)]), indent=2))
+        num_slots=args.num_slots, max_queue=args.max_queue,
+        deadline_s=args.deadline_s, health=dataclasses.asdict(health),
+        requests=[row(h) for h in handles]), indent=2))
 
 
 if __name__ == "__main__":

@@ -1,6 +1,10 @@
 from repro.serving.cost_model import EdgeProfile, EdgeCostModel
 from repro.serving.engine import DyMoEEngine, EngineConfig, \
     GenerationResult, ReplayStream
+from repro.serving.faults import AdmissionError, DeadlineExceeded, \
+    DispatchError, FaultInjector, FaultSpec, InjectedFault, NO_FAULTS, \
+    QueueFull, ReplayError, ServingError, SessionClosed, SessionHealth, \
+    requeue, result_with_retry, submit_with_retry
 from repro.serving.sampler import sample_token, sample_token_rows
 from repro.serving.request import Request, RequestHandle, SamplingParams, \
     TokenChunk
@@ -11,4 +15,10 @@ __all__ = ["EdgeProfile", "EdgeCostModel", "DyMoEEngine", "EngineConfig",
            "GenerationResult", "ReplayStream", "sample_token",
            "sample_token_rows", "Request", "RequestHandle",
            "SamplingParams", "TokenChunk", "ContinuousBatchingScheduler",
-           "SchedulerConfig"]
+           "SchedulerConfig",
+           # fault tolerance: taxonomy, injection, health, retry helpers
+           "ServingError", "ReplayError", "DispatchError",
+           "AdmissionError", "QueueFull", "DeadlineExceeded",
+           "SessionClosed", "InjectedFault", "FaultSpec", "FaultInjector",
+           "NO_FAULTS", "SessionHealth", "submit_with_retry", "requeue",
+           "result_with_retry"]

@@ -215,14 +215,23 @@ class GenerationResult:
     # the request was cancelled mid-flight: ``tokens`` is the partial
     # output up to the chunk boundary where its slot was freed
     cancelled: bool = False
+    # the cancellation was forced by the request's wall-clock
+    # ``deadline_s`` expiring in flight (deadline evictions are a
+    # cancellation: partial tokens, real partial accounting)
+    deadline_expired: bool = False
 
 
 class DyMoEEngine:
     def __init__(self, cfg: ModelConfig, params, engine_cfg: EngineConfig
-                 = EngineConfig()):
+                 = EngineConfig(), faults=None):
+        # ``faults``: optional repro.serving.faults.FaultInjector threaded
+        # through the serving hot path (scheduler dispatch/replay/admission
+        # sites and the expert cache's blob loads). None = every site is
+        # a no-op and the fault-free trace is untouched.
         assert engine_cfg.decode_chunk >= 1, engine_cfg.decode_chunk
         self.cfg = cfg
         self.ecfg = engine_cfg
+        self.faults = faults
         self.params = params
         self.qparams = (quantize_model(params, cfg)
                         if engine_cfg.use_dymoe else None)
@@ -266,7 +275,7 @@ class DyMoEEngine:
             enable_dyquant=e.enable_dyquant,
             prefetch_topk=pol.prefetch_topk,
         )
-        return DynamicExpertOrchestrator(ocfg)
+        return DynamicExpertOrchestrator(ocfg, faults=self.faults)
 
     def _expert_counts(self, crit: np.ndarray, active: np.ndarray
                        ) -> Tuple[np.ndarray, np.ndarray]:
@@ -326,7 +335,8 @@ class DyMoEEngine:
     # ------------------------------------------------- step-driven API
     def serve(self, num_slots: Optional[int] = None, *,
               pipeline: Optional[bool] = None,
-              slots_len: Optional[int] = None):
+              slots_len: Optional[int] = None,
+              max_queue: Optional[int] = None):
         """Open (and remember) a step-driven serving session — the open
         counterpart of ``generate_batch``. Returns the
         :class:`~repro.serving.scheduler.ContinuousBatchingScheduler`
@@ -336,17 +346,23 @@ class DyMoEEngine:
         ``sliding_window`` or ``cfg.max_seq_len``); a submitted request
         must fit ``prompt_len + max_new_tokens`` inside it.
 
-        An existing engine-owned session is retired first (its submitted
-        replay jobs are flushed, its worker stopped) — requests still
-        queued or live on it will never finalize, so drain it yourself
-        before re-serving if you care about them."""
+        ``max_queue`` bounds the admission queue: a ``submit`` beyond it
+        raises a typed :class:`~repro.serving.faults.QueueFull` instead of
+        growing latency without bound (backpressure; None = unbounded).
+
+        An existing engine-owned session is retired first: its submitted
+        replay jobs are flushed, its worker stopped, and any handle still
+        queued or in flight on it resolves with a typed
+        :class:`~repro.serving.faults.SessionClosed` error — drain it
+        yourself before re-serving if you want their results."""
         from repro.serving.scheduler import ContinuousBatchingScheduler
 
         if self._session is not None and not self._session.closed:
             self._session.flush()
             self._session.close()
         session = ContinuousBatchingScheduler(self, num_slots=num_slots)
-        session._ensure_started(slots_len=slots_len, pipeline=pipeline)
+        session._ensure_started(slots_len=slots_len, pipeline=pipeline,
+                                max_queue=max_queue)
         self._session = session
         return session
 
@@ -367,6 +383,16 @@ class DyMoEEngine:
             raise RuntimeError(
                 "no serving session is open: call serve() or submit() first")
         return self._session.step()
+
+    def health(self):
+        """Fault-tolerance snapshot of the engine's serving session —
+        see :class:`repro.serving.faults.SessionHealth`. ``status="ok"``
+        with zeroed counters when no session has been opened."""
+        from repro.serving.faults import SessionHealth
+
+        if self._session is None:
+            return SessionHealth(status="ok")
+        return self._session.health()
 
     # -------------------------------------------------------------- API
     def generate(self, request: Request, rng_key=None) -> GenerationResult:

@@ -62,6 +62,15 @@ class Request:
     eos_token: Optional[int] = None   # stop (inclusive) when sampled
     request_id: Optional[str] = None
     seed: Optional[int] = None        # per-request PRNG stream root
+    # WALL-CLOCK deadlines, measured from submission. ``deadline_s``: the
+    # whole-request budget — expired while queued, the request is shed
+    # with a typed ``DeadlineExceeded`` before wasting a prefill wave;
+    # expired in flight, the slot is freed at the next chunk boundary and
+    # the partial result carries ``deadline_expired=True``.
+    # ``ttft_deadline_s``: first-token budget — only meaningful while
+    # queued (admission samples the first token), shed the same way.
+    deadline_s: Optional[float] = None
+    ttft_deadline_s: Optional[float] = None
     # ``sampling`` is a CONSTRUCTION convenience, not a stored field
     # (InitVar): when given, it overwrites temperature/top_k/seed, which
     # are the single source of truth afterwards. Because replace() never
@@ -80,6 +89,12 @@ class Request:
             raise ValueError(
                 f"Request.max_new_tokens must be >= 1, "
                 f"got {self.max_new_tokens}")
+        for name in ("deadline_s", "ttft_deadline_s"):
+            v = getattr(self, name)
+            if v is not None and (math.isnan(v) or v < 0.0):
+                raise ValueError(
+                    f"Request.{name} must be a non-negative number of "
+                    f"seconds (or None), got {v}")
         if sampling is not None:
             self.temperature = sampling.temperature
             self.top_k = sampling.top_k
@@ -120,12 +135,20 @@ class RequestHandle:
     engine (admission -> chunks -> replay) while this handle exposes it:
 
       * :meth:`result` — the final ``GenerationResult``; drives the
-        session's :meth:`step` loop itself when the caller isn't.
+        session's :meth:`step` loop itself when the caller isn't. A
+        request that FAILED (replay fault, dispatch failure, deadline
+        shed, session closed — see :mod:`repro.serving.faults`) resolves
+        by RAISING its typed :class:`~repro.serving.faults.ServingError`
+        here; inspect :attr:`error` to check without raising.
       * :meth:`stream` — iterator of :class:`TokenChunk` events, delivered
         as each replay unit finalizes on the (possibly pipelined)
-        ``ReplayStream`` worker.
+        ``ReplayStream`` worker. The iterator simply ENDS when the
+        request resolves — with a result or a typed error.
       * :meth:`cancel` — frees the slot at the next chunk boundary; the
         result becomes partial (``result().cancelled``).
+
+    Every submitted handle RESOLVES — result or typed error — under every
+    fault the session tolerates; ``done`` is True either way.
 
     The event queue is written by the replay worker and read here. Only
     ONE thread may drive ``session.step()``: iterate ``stream()`` (or
@@ -152,11 +175,21 @@ class RequestHandle:
         self._ended = False      # this handle's iterator consumed the
         #                          end sentinel (single-consumer streams)
         self._result = None
+        self._error: Optional[BaseException] = None
+        # first finalizer wins: a natural completion racing a fault-path
+        # error (or a session close) must not overwrite the result
+        self._finish_lock = threading.Lock()
 
     # ------------------------------------------------------------- state
     @property
     def done(self) -> bool:
         return self._finished.is_set()
+
+    @property
+    def error(self) -> Optional[BaseException]:
+        """The typed :class:`~repro.serving.faults.ServingError` this
+        request resolved with, or None (still running, or succeeded)."""
+        return self._error
 
     def cancel(self) -> None:
         """Request cancellation: the scheduler frees this request's slot
@@ -184,6 +217,8 @@ class RequestHandle:
                     raise RuntimeError(
                         f"{self.request_id} cannot make progress: the "
                         "session is idle but the request never finalized")
+        if self._error is not None:
+            raise self._error
         return self._result
 
     def stream(self, *, drive: bool = True) -> Iterator[TokenChunk]:
@@ -239,6 +274,22 @@ class RequestHandle:
         # then the sentinel — a consumer that observes `done` can rely on
         # the result, and stream() treats `done && sentinel-not-consumed`
         # as "keep draining", so the sentinel may land last
-        self._result = result
-        self._finished.set()
+        with self._finish_lock:
+            if self._finished.is_set():
+                return           # a fault path resolved this handle first
+            self._result = result
+            self._finished.set()
+        self._events.put(_STREAM_END)
+
+    def _finish_error(self, exc: BaseException) -> None:
+        """Resolve this handle with a typed error (fault paths: replay
+        fault, dispatch failure, deadline shed, session close). Idempotent
+        and a no-op if the request already finished — the first finalizer
+        wins, so a fault racing a natural completion never erases a
+        result."""
+        with self._finish_lock:
+            if self._finished.is_set():
+                return
+            self._error = exc
+            self._finished.set()
         self._events.put(_STREAM_END)

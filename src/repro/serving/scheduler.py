@@ -125,11 +125,20 @@ from repro.core.orchestrator import StepTiming
 from repro.models.kv_cache import KVCache
 from repro.models.layers.moe import _capacity
 from repro.models.model import init_decode_state
+from repro.serving.faults import NO_FAULTS, AdmissionError, \
+    DeadlineExceeded, DispatchError, InjectedFault, QueueFull, \
+    ReplayError, SessionClosed, SessionHealth
 from repro.serving.request import Request, RequestHandle, TokenChunk
 from repro.serving.sampler import raw_key_data, resolve_sampling, \
     sample_token_rows
 
 __all__ = ["SchedulerConfig", "ContinuousBatchingScheduler"]
+
+# what counts as a recoverable device/allocation failure in the dispatch
+# and admission ladders: injected faults, XLA runtime errors (RuntimeError
+# subclasses) and allocation failures. Tracing/shape errors (TypeError,
+# ValueError) are bugs and propagate.
+_DISPATCH_ERRORS = (InjectedFault, RuntimeError, MemoryError)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -143,6 +152,9 @@ class SchedulerConfig:
     # per-slot cache length for OPEN sessions (submit/step); None defaults
     # to sliding_window or cfg.max_seq_len. run() sizes it to its workload.
     slots_len: Optional[int] = None
+    # admission-queue bound: submits beyond it raise a typed QueueFull
+    # (backpressure) instead of growing latency unbounded. None = no bound.
+    max_queue: Optional[int] = None
 
 
 @dataclasses.dataclass
@@ -185,6 +197,54 @@ class ContinuousBatchingScheduler:
     (the request queue is lock-guarded), and the replay worker is the
     only other writer (it owns ``_SlotState`` after admission and
     finalizes handles).
+
+    **Failure semantics.** The session's contract under faults (see
+    :mod:`repro.serving.faults` for the taxonomy and the injector the
+    chaos suite drives these ladders with): EVERY submitted handle
+    resolves — with a result or a typed :class:`ServingError` — nothing
+    hangs, and a fault only ever takes down the requests it actually
+    touched; the session keeps serving everyone else.
+
+      * **Replay fault** (a telemetry-replay job raises): replay jobs are
+        wrapped so they can never poison the :class:`ReplayStream`; the
+        failing job resolves ITS requests with :class:`ReplayError` and
+        marks the session. The next :meth:`step` completes recovery on
+        the driving thread: every still-in-flight request fails with
+        ``ReplayError`` too (the shared orchestrator's modeled clock and
+        expert cache died mid-update, so their accounting is lost), the
+        slots are freed, a FRESH orchestrator is built, and replay falls
+        back to inline serial mode (``pipeline=False``). Queued requests
+        are untouched and serve normally afterwards — degraded: no
+        replay/compute overlap, and their modeled numbers restart from a
+        cold expert cache. ``health().status`` reports ``"degraded"``
+        from then on.
+      * **Dispatch fault** (the fused decode dispatch or its boundary
+        sync raises): retried through a degradation ladder — halve the
+        chunk length down to 1 step (bit-identical by the
+        chunking-invariance of :func:`decode_many_batched`), then defer
+        half the live rows per retry (deferred rows freeze for the chunk
+        and re-dispatch next boundary — also bit-identical), and only
+        when a 1-step, single-row dispatch still fails does THAT slot
+        resolve with :class:`DispatchError`; remaining rows continue.
+      * **Admission fault** (a wave's prefill dispatch raises): the wave
+        is requeued and retried at half size down to a single candidate,
+        which then resolves with :class:`AdmissionError`; later waves and
+        in-flight rows are unaffected.
+      * **Backpressure / shedding**: a bounded queue (``max_queue``)
+        rejects ``submit`` with :class:`QueueFull` (no handle created);
+        queued requests whose ``deadline_s``/``ttft_deadline_s`` expire
+        are shed with :class:`DeadlineExceeded`; in-flight requests whose
+        ``deadline_s`` expires are evicted at the next boundary like a
+        cancel (partial result, ``deadline_expired=True``).
+      * **Close**: :meth:`close` drains what finished, then resolves
+        every still-unresolved handle with :class:`SessionClosed` so no
+        ``result(drive=False)``/``stream(drive=False)`` waiter blocks.
+
+    Fault-untouched requests keep bit-identical tokens AND bit-identical
+    modeled TTFT/TPOT: every recovery path is built from transformations
+    the scheduler is already invariant to (chunk length, slot count,
+    admission order), and the injector's no-op fast path keeps the
+    fault-free trace byte-for-byte unchanged.
     """
 
     def __init__(self, engine, num_slots: Optional[int] = None,
@@ -200,6 +260,15 @@ class ContinuousBatchingScheduler:
         # while ONE thread drives step()
         self._lock = threading.Lock()
         self._n_chunks = 0
+        # fault-tolerance state — lives on the instance from birth so
+        # health() is answerable before the session lazily starts
+        self._health = SessionHealth()
+        self._degraded = False
+        self._replay_broken = False  # set by the worker on a replay fault
+        self._replay_epoch = 0       # bumps turn queued jobs into no-ops
+        self._last_fault: Optional[BaseException] = None
+        self._max_queue = self.scfg.max_queue
+        self._faults = getattr(engine, "faults", None) or NO_FAULTS
 
     # ----------------------------------------------------------- helpers
     def _slot_budget(self, requests: Sequence[Request]) -> int:
@@ -264,12 +333,15 @@ class ContinuousBatchingScheduler:
     # --------------------------------------------------------- lifecycle
     def _ensure_started(self, *, num_slots: Optional[int] = None,
                         slots_len: Optional[int] = None,
-                        pipeline: Optional[bool] = None) -> None:
+                        pipeline: Optional[bool] = None,
+                        max_queue: Optional[int] = None) -> None:
         if self._started:
             return
         from repro.serving.engine import ReplayStream
 
         engine, cfg = self.engine, self.engine.cfg
+        if max_queue is not None:
+            self._max_queue = max_queue
         self._pipeline = self.scfg.pipeline if pipeline is None else pipeline
         b = num_slots or self._num_slots or self.scfg.num_slots
         self._b = max(1, b)
@@ -303,12 +375,59 @@ class ContinuousBatchingScheduler:
         if self._started:
             self._stream.drain()
 
+    def drain(self, *, cancel_queued: bool = True) -> None:
+        """Graceful shutdown: optionally cancel still-queued requests,
+        drive :meth:`step` until every in-flight request resolves, then
+        :meth:`flush` the replay stream. The session stays open
+        (:meth:`close` tears it down) — the serving CLI's Ctrl-C path
+        calls this so in-flight requests finish before exit."""
+        if not self._started:
+            return
+        if cancel_queued:
+            with self._lock:
+                queued = list(self._queue)
+            for h in queued:
+                h.cancel()
+        while self.step():
+            pass
+        self.flush()
+
     def close(self) -> None:
-        """Tear the session down (stops the replay worker). Pending
-        un-finalized requests stay pending; call :meth:`flush` first."""
-        if self._started:
+        """Tear the session down. Replay jobs already submitted are
+        drained first (requests whose device work completed finalize
+        normally); EVERY handle still unresolved after that — queued, in
+        flight, or lost to a fault — resolves with a typed
+        :class:`~repro.serving.faults.SessionClosed`, so no
+        ``result(drive=False)`` / ``stream(drive=False)`` waiter is ever
+        left blocked."""
+        if self._started and not self.closed:
+            try:
+                self._stream.drain()
+            except Exception:       # noqa: BLE001 — teardown never blocks
+                pass                # on a (legacy-)poisoned stream
             self._stream.close()
         self.closed = True
+        with self._lock:
+            self._queue.clear()
+            handles = list(self._handles)
+        err = SessionClosed(
+            "serving session closed before this request resolved")
+        for h in handles:
+            if not h.done:
+                h._finish_error(err)
+
+    def health(self) -> SessionHealth:
+        """Snapshot of the session's fault-tolerance state — see
+        :class:`~repro.serving.faults.SessionHealth` for field meanings
+        and the status ladder (``ok`` / ``degraded`` / ``closed``)."""
+        status = ("closed" if self.closed
+                  else "degraded" if self._degraded else "ok")
+        with self._lock:
+            depth = len(self._queue)
+        return dataclasses.replace(
+            self._health, status=status, queue_depth=depth,
+            in_flight=(sum(s is not None for s in self._states)
+                       if self._started else 0))
 
     def __enter__(self) -> "ContinuousBatchingScheduler":
         return self
@@ -332,9 +451,16 @@ class ContinuousBatchingScheduler:
         else ``PRNGKey(request.seed)``. ``temperature > 0`` with neither
         falls back to greedy with a warning (the documented
         ``sample_token`` contract — a keyless request can't crash or
-        poison the slot batch)."""
+        poison the slot batch).
+
+        Backpressure: with a bounded queue (``max_queue``) a submit over
+        the bound raises a typed
+        :class:`~repro.serving.faults.QueueFull` and creates NO handle —
+        retry later (:func:`~repro.serving.faults.submit_with_retry`) or
+        shed the request. A closed session raises
+        :class:`~repro.serving.faults.SessionClosed`."""
         if self.closed:
-            raise RuntimeError("serving session is closed")
+            raise SessionClosed("serving session is closed")
         self._ensure_started()
         need = request.prompt_len + request.max_new_tokens
         if self.engine.cfg.sliding_window is None and need > self._slots_len:
@@ -343,17 +469,27 @@ class ContinuousBatchingScheduler:
                 f" + max_new {request.max_new_tokens}) but the session's "
                 f"slot budget is {self._slots_len}; open the session with a "
                 f"larger slots_len")
-        with self._lock:   # index -> request_id must be race-free too
+        # ONE lock section end to end: the queue-bound check, the
+        # index -> request_id assignment and the queue append must agree
+        # under concurrent submitters, and the handle must be visible to
+        # admission only once fully set up
+        with self._lock:
+            if self._max_queue is not None and \
+                    len(self._queue) >= self._max_queue:
+                self._health.queue_rejections += 1
+                raise QueueFull(
+                    f"admission queue is full ({self._max_queue} queued); "
+                    "retry later (faults.submit_with_retry) or open the "
+                    "session with a larger max_queue")
             h = RequestHandle(self, len(self._handles), request,
                               time.perf_counter())
             self._handles.append(h)
-        temp, top_k, key = resolve_sampling(request, rng_key,
-                                            context=h.request_id)
-        h.temperature, h.top_k = float(temp), int(top_k)
-        h.key = raw_key_data(key) if key is not None else None
-        if h.temperature > 0.0:
-            self._any_sampling = True
-        with self._lock:   # visible to admission only once fully set up
+            temp, top_k, key = resolve_sampling(request, rng_key,
+                                                context=h.request_id)
+            h.temperature, h.top_k = float(temp), int(top_k)
+            h.key = raw_key_data(key) if key is not None else None
+            if h.temperature > 0.0:
+                self._any_sampling = True
             self._queue.append(h)
         return h
 
@@ -364,20 +500,61 @@ class ContinuousBatchingScheduler:
         live) dispatch one fused decode chunk + its replay job. Returns
         True while the session is making progress; False when idle (no
         queued, live, or cancelled work) — replay jobs may still be in
-        flight, :meth:`flush` waits for them."""
+        flight, :meth:`flush` waits for them.
+
+        Fault-tolerance work rides the same boundary, in order: finish
+        recovering from a replay fault (fail+free affected slots, swap to
+        inline replay), shed queued requests whose deadlines expired,
+        then the sweep also evicts in-flight rows past ``deadline_s``."""
         if self.closed:
-            raise RuntimeError("serving session is closed")
+            raise SessionClosed("serving session is closed")
         if not self._started:
             return False
-        progress = self._sweep_cancelled()
+        progress = self._recover_replay()
+        progress |= self._shed_expired()
+        progress |= self._sweep_cancelled()
         progress |= self._admit_boundary()
         if self._done.all():
             return progress
         self._dispatch_chunk()
         return True
 
+    def _shed_expired(self) -> bool:
+        """Shed queued requests whose wall-clock deadline
+        (``deadline_s`` or ``ttft_deadline_s``, measured from submission)
+        has already expired: they could not possibly meet it, so they
+        resolve with a typed :class:`DeadlineExceeded` instead of wasting
+        an admission wave's prefill on them."""
+        now = time.perf_counter()
+        shed: List[RequestHandle] = []
+        with self._lock:
+            if not self._queue:
+                return False
+            keep: Deque[RequestHandle] = deque()
+            for h in self._queue:
+                r = h.request
+                waited = now - h.submit_t
+                if (r.deadline_s is not None and waited > r.deadline_s) \
+                        or (r.ttft_deadline_s is not None
+                            and waited > r.ttft_deadline_s):
+                    shed.append(h)
+                else:
+                    keep.append(h)
+            if not shed:
+                return False
+            self._queue = keep
+            self._health.deadline_shed += len(shed)
+        for h in shed:
+            req = h.request
+            h._finish_error(DeadlineExceeded(
+                f"{h.request_id}: shed after {now - h.submit_t:.3f}s in "
+                f"queue (deadline_s={req.deadline_s}, "
+                f"ttft_deadline_s={req.ttft_deadline_s})"))
+        return True
+
     def _sweep_cancelled(self) -> bool:
-        """Free the slots (and queue positions) of cancelled requests and
+        """Free the slots (and queue positions) of cancelled requests —
+        and of in-flight requests whose ``deadline_s`` expired — and
         finalize their partial results through the replay stream, AFTER
         any already-dispatched chunks' tokens have drained into them."""
         progress = False
@@ -392,15 +569,23 @@ class ContinuousBatchingScheduler:
                         keep.append(h)
                 self._queue = keep
         for h in dropped:   # finalize outside the lock (may run inline)
-            self._stream.submit(partial(self._finalize_unadmitted, h))
+            self._submit_replay(partial(self._finalize_unadmitted, h), [h])
             progress = True
+        now = time.perf_counter()
         for r in range(self._b):
             st = self._states[r]
-            if st is not None and st.handle.cancel_requested:
+            if st is None:
+                continue
+            dl = st.request.deadline_s
+            expired = dl is not None and now - st.handle.submit_t > dl
+            if st.handle.cancel_requested or expired:
                 self._states[r] = None   # freed for the admission below
                 self._done[r] = True     # device row freezes from now on
-                self._stream.submit(
-                    partial(self._finalize, st, cancelled=True))
+                if expired and not st.handle.cancel_requested:
+                    self._health.deadline_evictions += 1
+                self._submit_replay(
+                    partial(self._finalize, st, cancelled=True,
+                            deadline_expired=expired), [st.handle])
                 progress = True
         return progress
 
@@ -422,9 +607,12 @@ class ContinuousBatchingScheduler:
         if not free or not self._queue:
             return False
         n_survivors = 0
+        cap: Optional[int] = None   # ladder: bound on a retried wave size
         waves = []   # (rcaches, src rows, first tokens, states)
         while n_survivors < len(free) and self._queue:
             room = len(free) - n_survivors
+            if cap is not None:
+                room = min(room, cap)
             cands: List[RequestHandle] = []
             with self._lock:
                 while self._queue and len(cands) < room:
@@ -437,47 +625,76 @@ class ContinuousBatchingScheduler:
             lens = [h.request.prompt_len for h in cands]
             n = len(cands)
             batched = n > 1
-            if batched:
-                smax = max(lens)
-                prompts = np.zeros((n, smax), np.int32)
-                for i, h in enumerate(cands):
-                    prompts[i, smax - lens[i]:] = h.request.prompt_tokens
-                logits, rcaches, info = engine._prefill(
-                    engine.params, tokens=jnp.asarray(prompts),
-                    qparams=engine.qparams, cache_slots=self._slots_len,
-                    lengths=jnp.asarray(lens, jnp.int32),
-                    row_local=True,
-                    # exact host-side solo capacities: the in-graph
-                    # f32 formula can truncate one slot differently
-                    row_capacities=jnp.asarray(
-                        [_capacity(cfg, s) for s in lens], jnp.int32)
-                    if cfg.is_moe else None)
-            else:  # exact-shape solo program (also the SSM/hybrid path)
-                prompt = jnp.asarray(
-                    cands[0].request.prompt_tokens, jnp.int32)[None, :]
-                logits, rcaches, info = engine._prefill(
-                    engine.params, tokens=prompt,
-                    qparams=engine.qparams, cache_slots=self._slots_len)
-            # the wave's ONE host sync: every candidate's first token.
-            # Sampled candidates draw through the per-row sampler with
-            # fold count 0 — bit-identical to solo ``sample_token`` over
-            # the (1, V) row (greedy rows take the same argmax)
-            if any(h.temperature > 0.0 for h in cands):
-                keys = np.zeros((n, 2), np.uint32)
-                for i, h in enumerate(cands):
-                    if h.key is not None:
-                        keys[i] = h.key
-                keys0 = jax.vmap(lambda k: jax.random.fold_in(k, 0))(
-                    jnp.asarray(keys))
-                first = np.asarray(jax.device_get(sample_token_rows(
-                    logits, keys0,
-                    jnp.asarray([h.temperature for h in cands],
-                                jnp.float32),
-                    jnp.asarray([h.top_k for h in cands], jnp.int32))),
-                    np.int32)
-            else:
-                first = np.asarray(
-                    jax.device_get(jnp.argmax(logits, axis=-1)), np.int32)
+            try:
+                self._faults.fire("admit.alloc", n=n)
+                if batched:
+                    smax = max(lens)
+                    prompts = np.zeros((n, smax), np.int32)
+                    for i, h in enumerate(cands):
+                        prompts[i, smax - lens[i]:] = \
+                            h.request.prompt_tokens
+                    logits, rcaches, info = engine._prefill(
+                        engine.params, tokens=jnp.asarray(prompts),
+                        qparams=engine.qparams,
+                        cache_slots=self._slots_len,
+                        lengths=jnp.asarray(lens, jnp.int32),
+                        row_local=True,
+                        # exact host-side solo capacities: the in-graph
+                        # f32 formula can truncate one slot differently
+                        row_capacities=jnp.asarray(
+                            [_capacity(cfg, s) for s in lens], jnp.int32)
+                        if cfg.is_moe else None)
+                else:  # exact-shape solo program (also the SSM/hybrid path)
+                    prompt = jnp.asarray(
+                        cands[0].request.prompt_tokens, jnp.int32)[None, :]
+                    logits, rcaches, info = engine._prefill(
+                        engine.params, tokens=prompt,
+                        qparams=engine.qparams,
+                        cache_slots=self._slots_len)
+                # the wave's ONE host sync: every candidate's first token.
+                # Sampled candidates draw through the per-row sampler with
+                # fold count 0 — bit-identical to solo ``sample_token``
+                # over the (1, V) row (greedy rows take the same argmax)
+                if any(h.temperature > 0.0 for h in cands):
+                    keys = np.zeros((n, 2), np.uint32)
+                    for i, h in enumerate(cands):
+                        if h.key is not None:
+                            keys[i] = h.key
+                    keys0 = jax.vmap(lambda k: jax.random.fold_in(k, 0))(
+                        jnp.asarray(keys))
+                    first = np.asarray(jax.device_get(sample_token_rows(
+                        logits, keys0,
+                        jnp.asarray([h.temperature for h in cands],
+                                    jnp.float32),
+                        jnp.asarray([h.top_k for h in cands], jnp.int32))),
+                        np.int32)
+                else:
+                    first = np.asarray(
+                        jax.device_get(jnp.argmax(logits, axis=-1)),
+                        np.int32)
+            except _DISPATCH_ERRORS as e:
+                # --- admission degradation ladder: requeue the wave and
+                # retry at half size; a single candidate that still fails
+                # resolves with a typed AdmissionError. Splitting a wave
+                # is bit-identical for its survivors (per-candidate
+                # replay order and row-local prefill rows are unchanged)
+                self._last_fault = e
+                self._health.last_fault = repr(e)
+                if n > 1:
+                    with self._lock:
+                        for h in reversed(cands):
+                            self._queue.appendleft(h)
+                    self._health.admission_retries += 1
+                    cap = max(1, n // 2)
+                    continue
+                self._health.admission_failures += 1
+                err = AdmissionError(
+                    f"{cands[0].request_id}: admission prefill failed "
+                    f"even as a solo wave ({e!r})")
+                err.__cause__ = e
+                cands[0]._finish_error(err)
+                continue
+            cap = None   # a clean wave resets the ladder
             wave_states: List[_SlotState] = []
             wave_src: List[int] = []
             wave_tok: List[int] = []
@@ -498,10 +715,11 @@ class ContinuousBatchingScheduler:
                     wave_src.append(i)
                     wave_tok.append(ft)
                     wave_surv.append(st)
-            self._stream.submit(partial(
+            self._submit_replay(partial(
                 self._replay_prefill, wave_states,
                 (info.critical_masks, info.active_masks,
-                 info.predicted_next), batched))
+                 info.predicted_next), batched),
+                [st.handle for st in wave_states])
             # decode-wall clock: starts AFTER the prefill replay
             # (inline in serial mode), mirroring solo generate's t_dec —
             # so measured decode throughput excludes prefill + its replay
@@ -537,6 +755,18 @@ class ContinuousBatchingScheduler:
 
     # ---------------------------------------------------------- dispatch
     def _dispatch_chunk(self) -> None:
+        """Dispatch one fused decode chunk — with a degradation ladder.
+
+        A failed dispatch (or boundary sync — async device errors surface
+        there) is retried with a halved chunk length, down to one step;
+        then with half the live rows deferred per retry (they freeze for
+        this chunk and re-dispatch next boundary); a 1-step single-row
+        dispatch that still fails resolves that slot with a typed
+        :class:`DispatchError` and the rest continue. Every rung is a
+        transformation the scheduler's outputs are invariant to (chunk
+        length, row placement), so surviving rows stay bit-identical.
+        ``_decode_batched`` donates nothing, so re-dispatching the same
+        inputs is safe."""
         engine = self.engine
         emitted_before = self._emitted.copy()
         sample_kw = {}
@@ -546,25 +776,69 @@ class ContinuousBatchingScheduler:
             sample_kw = dict(rng_keys=jnp.asarray(self._keys),
                              temperatures=jnp.asarray(self._temps),
                              top_ks=jnp.asarray(self._topks))
-        toks_d, self._caches, infos, done_d, emitted_d = \
-            engine._decode_batched(
-                engine.params, tokens=self._tok_d,
-                caches=self._caches, num_steps=self._chunk,
-                done=jnp.asarray(self._done),
-                n_emitted=jnp.asarray(self._emitted),
-                limits=jnp.asarray(self._limits),
-                eos_tokens=jnp.asarray(self._eos),
-                qparams=engine.qparams, **sample_kw)
+        chunk = self._chunk          # transient: self._chunk is untouched
+        deferred = np.zeros(self._b, bool)
+        while True:
+            live = [r for r in range(self._b)
+                    if not self._done[r] and not deferred[r]]
+            if not live:
+                return   # everything deferred/failed; retry next step
+            try:
+                self._faults.fire("device.dispatch", chunk=self._n_chunks,
+                                  num_steps=chunk, rows=len(live))
+                toks_d, caches, infos, done_d, emitted_d = \
+                    engine._decode_batched(
+                        engine.params, tokens=self._tok_d,
+                        caches=self._caches, num_steps=chunk,
+                        done=jnp.asarray(self._done | deferred),
+                        n_emitted=jnp.asarray(self._emitted),
+                        limits=jnp.asarray(self._limits),
+                        eos_tokens=jnp.asarray(self._eos),
+                        qparams=engine.qparams, **sample_kw)
+                # the boundary sync: ONLY the small (B,) masks cross —
+                # the (T, L, B, E) telemetry stays behind for the worker
+                done_h, emitted_h = jax.device_get((done_d, emitted_d))
+                break
+            except _DISPATCH_ERRORS as e:
+                self._health.dispatch_retries += 1
+                self._health.last_fault = repr(e)
+                self._last_fault = e
+                if chunk > 1:
+                    chunk //= 2          # bit-identical: chunk invariance
+                    continue
+                if len(live) > 1:        # bit-identical: slot invariance
+                    for r in live[len(live) // 2:]:
+                        deferred[r] = True
+                    continue
+                # 1-step, single-row dispatch still failing: fail THAT
+                # slot with a typed error; everyone else keeps serving
+                r = live[0]
+                st = self._states[r]
+                self._states[r] = None
+                self._done[r] = True
+                self._health.dispatch_failures += 1
+                err = DispatchError(
+                    f"{st.handle.request_id}: device decode dispatch kept "
+                    f"failing down to a 1-step solo chunk ({e!r})")
+                err.__cause__ = e
+                st.handle._finish_error(err)
+                continue
+        self._caches = caches
         self._tok_d = toks_d[-1]  # next chunk's data dep: ON DEVICE
-        # the boundary sync: ONLY the small (B,) masks cross —
-        # the (T, L, B, E) telemetry stays behind for the worker
-        done_h, emitted_h = jax.device_get((done_d, emitted_d))
-        self._done = np.array(done_h)  # device_get views are read-only
-        self._emitted = np.array(emitted_h)
+        new_done = np.array(done_h)  # device_get views are read-only
+        new_emitted = np.array(emitted_h)
+        if deferred.any():
+            # deferred rows were frozen for THIS dispatch only (we passed
+            # done=True for them): restore their host masks so they
+            # dispatch again at the next boundary
+            new_done[deferred] = self._done[deferred]
+            new_emitted[deferred] = self._emitted[deferred]
+        self._done = new_done
+        self._emitted = new_emitted
         rows = []
         for r in range(self._b):
             st = self._states[r]
-            if st is None:
+            if st is None or deferred[r]:
                 continue
             rows.append((r, st,
                          int(self._emitted[r] - emitted_before[r]),
@@ -573,14 +847,98 @@ class ContinuousBatchingScheduler:
             if self._done[r]:
                 self._states[r] = None  # evict: free to admit; the
                 #                         worker finalizes st later
-        self._stream.submit(partial(
+        self._submit_replay(partial(
             self._replay_chunk, toks_d,
             (infos.critical_masks, infos.active_masks,
-             infos.predicted_next), rows))
+             infos.predicted_next), rows),
+            [st.handle for _, st, _, _, _ in rows])
         self._n_chunks += 1
 
+    # ------------------------------------------- replay fault tolerance
+    def _submit_replay(self, fn, handles) -> None:
+        """Submit a replay job WRAPPED so it can never poison the
+        :class:`ReplayStream`: if ``fn`` raises, the session is marked
+        degraded and the job's OWN handles (the ones ``fn`` would have
+        finalized) resolve with a typed :class:`ReplayError` instead of
+        the exception propagating into the stream."""
+        self._stream.submit(partial(self._run_replay, self._replay_epoch,
+                                    fn, handles))
+
+    def _run_replay(self, epoch, fn, handles) -> None:
+        # replay-stream context (the worker thread when pipelined)
+        if self._replay_broken or epoch != self._replay_epoch:
+            # a job from before a replay fault: its telemetry would
+            # replay against a clock/cache that died mid-update —
+            # skip-fail its requests instead of running it
+            err = self._replay_error()
+            for h in handles:
+                h._finish_error(err)
+            return
+        try:
+            fn()
+        except Exception as exc:   # noqa: BLE001 — translated to typed
+            self._on_replay_failure(exc, handles)
+
+    def _replay_error(self) -> ReplayError:
+        return ReplayError(
+            "telemetry replay failed while this request was in flight; "
+            "its device tokens may exist but its modeled accounting is "
+            f"lost (cause: {self._last_fault!r})")
+
+    def _on_replay_failure(self, exc: BaseException, handles) -> None:
+        # worker half of replay-fault handling; _recover_replay() (the
+        # driving thread, next step()) completes the fallback
+        with self._lock:
+            self._last_fault = exc
+            self._replay_broken = True
+            self._replay_epoch += 1   # queued jobs become stale no-ops
+            self._degraded = True
+            self._health.replay_faults += 1
+            self._health.last_fault = repr(exc)
+        err = self._replay_error()
+        err.__cause__ = exc
+        for h in handles:
+            h._finish_error(err)
+
+    def _recover_replay(self) -> bool:
+        """Driving-thread half of replay-fault recovery, run at the top
+        of :meth:`step`: the shared orchestrator's modeled clock/cache
+        died mid-replay, so every in-flight request's accounting is lost
+        — fail them with :class:`ReplayError`, free their slots, rebuild
+        a FRESH orchestrator, and fall back to inline serial replay
+        (``pipeline=False``). Queued requests are untouched: they serve
+        normally afterwards, just degraded (no overlap, cold modeled
+        cache). The session stays usable; ``health()`` reports
+        ``degraded``."""
+        if not self._replay_broken:
+            return False
+        from repro.serving.engine import ReplayStream
+
+        err = self._replay_error()
+        progress = False
+        for r in range(self._b):
+            st = self._states[r]
+            if st is not None:
+                st.handle._finish_error(err)   # idempotent — the worker
+                #                                may have failed it first
+                self._states[r] = None
+                self._done[r] = True
+                progress = True
+        self._orch = self.engine._make_orchestrator()  # fresh clock+cache
+        old = self._stream
+        with self._lock:
+            # bump AGAIN: anything submitted between the fault and now is
+            # stale, so the OLD worker drains it without ever touching
+            # the fresh orchestrator concurrently with this thread
+            self._replay_epoch += 1
+            self._replay_broken = False
+        self._stream = ReplayStream(pipelined=False)  # inline from now on
+        old.close()   # fast: stale jobs skip-fail, then the worker exits
+        return progress
+
     # ------------------------------------------------ replay-worker side
-    def _finalize(self, st: _SlotState, *, cancelled: bool = False) -> None:
+    def _finalize(self, st: _SlotState, *, cancelled: bool = False,
+                  deadline_expired: bool = False) -> None:
         # replay-stream context: st's telemetry has fully drained.
         # ``cancelled`` comes from the PATH that finalized (the cancel
         # sweep), not from the handle's flag — a cancel() that races a
@@ -606,7 +964,7 @@ class ContinuousBatchingScheduler:
             decode_weight_bytes_per_tok=(
                 st.decode_weight_bytes / n_dec
                 if st.decode_timings else None),
-            cancelled=cancelled))
+            cancelled=cancelled, deadline_expired=deadline_expired))
 
     def _finalize_unadmitted(self, h: RequestHandle) -> None:
         """A request cancelled while still queued: nothing ran for it."""
@@ -624,6 +982,7 @@ class ContinuousBatchingScheduler:
         candidate's prefill TokenChunk, and finalize the one-token
         requests."""
         engine = self.engine
+        self._faults.fire("replay.prefill", n=len(wave))
         crit, act, pred = jax.device_get(tele)
         for i, st in enumerate(wave):
             if crit is None:
@@ -649,6 +1008,7 @@ class ContinuousBatchingScheduler:
         """Fetch + replay one decode chunk's telemetry: the job the
         pipeline overlaps with the NEXT chunk's device dispatch."""
         engine = self.engine
+        self._faults.fire("replay.chunk", rows=len(rows))
         toks_np, crit, act, pred = jax.device_get((toks_ref,) + tele)
         toks_np = np.asarray(toks_np)
         for r, st, keep, ctx0, is_done in rows:
@@ -700,4 +1060,5 @@ class ContinuousBatchingScheduler:
         finally:
             self.close()
         assert all(h.done for h in handles)
-        return [h._result for h in handles]
+        # a request that failed under a fault raises its typed error here
+        return [h.result() for h in handles]

@@ -1,9 +1,70 @@
+import importlib.util
 import os
+import signal
 
 # Keep smoke tests on the single real CPU device (the 512-device override is
 # dryrun.py-only, per the multi-pod dry-run contract).
 os.environ.setdefault("JAX_PLATFORMS", "cpu")
 
 import jax  # noqa: E402
+import pytest  # noqa: E402
 
 jax.config.update("jax_enable_x64", False)
+
+# ---------------------------------------------------------------------------
+# Per-test timeout enforcement.
+#
+# The chaos/stress suites (tests/test_faults.py, tests/test_serving_stress.py)
+# assert that NO handle ever hangs under injected faults — an assertion that
+# only means something if a hung test FAILS instead of wedging the whole run.
+# CI installs the real pytest-timeout plugin (pinned in pyproject's dev
+# extra, with `timeout` configured in [tool.pytest.ini_options]); when the
+# plugin is unavailable (bare container, no network), this fallback enforces
+# the same ini/marker settings with SIGALRM. Main-thread only and Unix-only —
+# exactly what these suites need, not a general plugin replacement.
+# ---------------------------------------------------------------------------
+_HAVE_PYTEST_TIMEOUT = importlib.util.find_spec("pytest_timeout") is not None
+
+
+def pytest_addoption(parser):
+    if not _HAVE_PYTEST_TIMEOUT:
+        # mirror pytest-timeout's ini key so pyproject configures BOTH
+        parser.addini("timeout", "per-test timeout in seconds "
+                                 "(pytest-timeout fallback shim)",
+                      default="0")
+
+
+def pytest_configure(config):
+    if not _HAVE_PYTEST_TIMEOUT:
+        config.addinivalue_line(
+            "markers",
+            "timeout(seconds): per-test timeout (pytest-timeout fallback)")
+
+
+def _timeout_for(item):
+    marker = item.get_closest_marker("timeout")
+    if marker is not None and marker.args:
+        return float(marker.args[0])
+    try:
+        return float(item.config.getini("timeout") or 0)
+    except (TypeError, ValueError):
+        return 0.0
+
+
+if not _HAVE_PYTEST_TIMEOUT and hasattr(signal, "SIGALRM"):
+    @pytest.hookimpl(wrapper=True)
+    def pytest_runtest_call(item):
+        seconds = _timeout_for(item)
+        if seconds <= 0:
+            return (yield)
+        def _alarm(signum, frame):
+            raise pytest.fail.Exception(
+                f"{item.nodeid} timed out after {seconds:g}s "
+                "(pytest-timeout fallback shim)")
+        old = signal.signal(signal.SIGALRM, _alarm)
+        signal.setitimer(signal.ITIMER_REAL, seconds)
+        try:
+            return (yield)
+        finally:
+            signal.setitimer(signal.ITIMER_REAL, 0)
+            signal.signal(signal.SIGALRM, old)

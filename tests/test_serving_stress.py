@@ -1,0 +1,122 @@
+"""Multi-threaded serving stress: concurrent ``submit()`` / ``cancel()``
+/ ``stream(drive=False)`` consumers racing the ONE driving thread while
+faults are injected.
+
+The contract under that race (see ``ContinuousBatchingScheduler``
+*Failure semantics*): no deadlock (the per-test timeout turns a hang
+into a failure), every created handle resolves — result or typed
+:class:`ServingError` — handle indices / request ids stay unique under
+concurrent submission, and non-driving stream consumers terminate.
+"""
+import random
+import threading
+import time
+
+import jax
+import pytest
+
+from repro.models import init_params
+from repro.models.config import DyMoEPolicy, ModelConfig
+from repro.serving import DyMoEEngine, EngineConfig, Request
+from repro.serving.cost_model import EdgeProfile
+from repro.serving.faults import FaultInjector, FaultSpec, QueueFull, \
+    ServingError, SessionClosed
+
+pytestmark = pytest.mark.timeout(300)
+
+
+@pytest.fixture(scope="module")
+def moe_setup():
+    cfg = ModelConfig(
+        name="t", arch_type="moe", num_layers=2, d_model=64, vocab_size=128,
+        num_heads=2, num_kv_heads=1, head_dim=32, num_experts=4,
+        num_experts_per_tok=2, moe_d_ff=64, capacity_factor=4.0,
+        dtype="float32", remat="none",
+        dymoe=DyMoEPolicy(low_bits=2, retention=0.75))
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    return cfg, params
+
+
+def test_threaded_submit_cancel_stream_under_faults(moe_setup):
+    cfg, params = moe_setup
+    eng = DyMoEEngine(
+        cfg, params,
+        EngineConfig(profile=EdgeProfile().with_vram(16), decode_chunk=4),
+        faults=FaultInjector([
+            FaultSpec(site="replay.chunk", at=2),
+            FaultSpec(site="device.dispatch", at=4, times=2),
+            FaultSpec(site="replay.prefill", kind="delay",
+                      delay_s=0.01, times=3),
+        ], seed=0))
+    session = eng.serve(num_slots=2, slots_len=64, max_queue=6)
+
+    handles, hlock = [], threading.Lock()
+    consumers = []
+    thread_errs = []
+
+    def consume(h):
+        try:
+            for _ in h.stream(drive=False):   # non-driving consumer:
+                pass                          # waits, never steps
+        except ServingError:
+            pass                              # typed resolution is fine
+        except BaseException as e:            # noqa: BLE001
+            thread_errs.append(e)
+
+    def submitter(tid):
+        rng = random.Random(tid)
+        try:
+            for i in range(8):
+                req = Request(
+                    prompt_tokens=[1 + tid, 2 + i, 3, 4 + (i % 3)],
+                    max_new_tokens=rng.randint(1, 6),
+                    request_id=f"t{tid}-{i}",
+                    deadline_s=(0.0 if rng.random() < 0.15 else None))
+                try:
+                    h = session.submit(req)
+                except QueueFull:             # backpressure: shed + go on
+                    time.sleep(0.005)
+                    continue
+                except SessionClosed:
+                    return
+                with hlock:
+                    handles.append(h)
+                if rng.random() < 0.25:
+                    h.cancel()                # racing the sweep
+                if rng.random() < 0.4:
+                    c = threading.Thread(target=consume, args=(h,),
+                                         daemon=True)
+                    c.start()
+                    with hlock:
+                        consumers.append(c)
+        except BaseException as e:            # noqa: BLE001
+            thread_errs.append(e)
+
+    threads = [threading.Thread(target=submitter, args=(t,), daemon=True)
+               for t in range(3)]
+    for t in threads:
+        t.start()
+    # THE driving thread: races the submitters/cancellers the whole time
+    while any(t.is_alive() for t in threads):
+        session.step()
+    for t in threads:
+        t.join(timeout=30)
+        assert not t.is_alive(), "submitter thread wedged"
+    session.drain()                           # cancel leftovers, resolve
+    session.close()                           # stragglers -> SessionClosed
+
+    assert not thread_errs, thread_errs
+    assert handles                            # the race submitted SOMETHING
+    for h in handles:
+        assert h.done, f"{h.request_id} never resolved"
+        assert h.error is None or isinstance(h.error, ServingError), \
+            f"{h.request_id}: untyped {h.error!r}"
+    # concurrent submission kept identities unique
+    assert len({h.request_id for h in handles}) == len(handles)
+    assert len({h.index for h in handles}) == len(handles)
+    # non-driving consumers all terminated (no one waits forever)
+    for c in consumers:
+        c.join(timeout=30)
+        assert not c.is_alive(), "stream consumer wedged"
+    # the session survived the whole ordeal to a clean close
+    assert session.health().status == "closed"
