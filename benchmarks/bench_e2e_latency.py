@@ -230,6 +230,117 @@ BENCH_MOE = dataclasses.replace(
     dymoe=dataclasses.replace(TINY_MOE.dymoe, low_bits=0))
 
 
+def fused_vs_dual_decode(smoke: bool = False) -> List[dict]:
+    """Straggler-workload decode through the fused dual-buffer expert
+    kernel: a slot batch where half the rows have already drained (the
+    regime every ragged serving trace ends in). Three dispatch variants
+    of the SAME jitted ``decode_many_batched``:
+
+      all_live          — every slot decoding (the cost ceiling),
+      half_done         — half the rows done; the ragged live-row grid
+                          skips their expert FLOPs/IO but buffers stay
+                          at B (what a done-mask alone buys),
+      half_done_livecap — same, plus the scheduler's power-of-two
+                          ``live_cap`` shrinking the capacity buffers to
+                          the live count (the full fused win).
+
+    Parity is the headline: live rows' tokens must be BITWISE identical
+    across all three (a row never feels its dead neighbours, the shrink,
+    or its slot index) and dead rows' tokens stay frozen. ``--smoke``
+    asserts parity always; the straggler speedup only on >2-core runners
+    (tiny-model wall-clock is scheduler-noise-bound below that).
+    Alongside the measured walls, the modeled per-layer weight traffic
+    of the fused ragged dispatch vs the pre-fused dual-dispatch pair
+    (every expert's full blob, both precisions, every step) comes from
+    the cost model — the number the TPU-target latency model rides on."""
+    import os
+    from functools import partial
+
+    from repro.models import (decode_many_batched, prefill, quantize_model)
+
+    cfg = BENCH_MOE
+    b = 8
+    steps = 8 if smoke else 24
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    qp = quantize_model(params, cfg)
+    rng = np.random.default_rng(5)
+    prompt = jnp.asarray(rng.integers(1, cfg.vocab_size, (b, 8)), jnp.int32)
+    logits, caches, _ = prefill(params, cfg, prompt, qparams=qp,
+                                cache_slots=8 + steps + 1)
+    tok0 = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    half = np.zeros(b, bool)
+    half[b // 2:] = True
+    jfn = jax.jit(partial(decode_many_batched, cfg=cfg),
+                  static_argnames=("num_steps", "live_cap"))
+
+    def call(done, live_cap):
+        return jfn(params, tokens=tok0, caches=caches, num_steps=steps,
+                   done=jnp.asarray(done),
+                   n_emitted=jnp.ones((b,), jnp.int32),
+                   limits=jnp.full((b,), steps + 1, jnp.int32),
+                   eos_tokens=jnp.full((b,), -1, jnp.int32),
+                   qparams=qp, live_cap=live_cap)
+
+    variants = {"all_live": (np.zeros(b, bool), None),
+                "half_done": (half, None),
+                "half_done_livecap": (half, b // 2)}
+    toks, walls = {}, {}
+    for name, (done, cap) in variants.items():
+        out = call(done, cap)             # warm-up / compile
+        toks[name] = np.asarray(out[0])
+        best = float("inf")
+        for _ in range(3):
+            t0 = time.perf_counter()
+            call(done, cap)[0].block_until_ready()
+            best = min(best, time.perf_counter() - t0)
+        walls[name] = best
+    live = ~half
+    parity = (np.array_equal(toks["half_done"][:, live],
+                             toks["all_live"][:, live])
+              and np.array_equal(toks["half_done_livecap"][:, live],
+                                 toks["all_live"][:, live]))
+    frozen = all(np.array_equal(toks[n][:, half],
+                                np.broadcast_to(np.asarray(tok0)[half],
+                                                (steps, b // 2)))
+                 for n in ("half_done", "half_done_livecap"))
+    speedup = walls["all_live"] / walls["half_done_livecap"]
+
+    cost = EdgeCostModel(cfg, EdgeProfile())
+    dual_bytes = cost.dual_dispatch_weight_bytes(include_shared=False)
+    rows = []
+    for name in variants:
+        n_live = int((~variants[name][0]).sum())
+        # fused ragged traffic: at most live*k experts hold live slots
+        n_hi = min(cfg.num_experts, n_live * cfg.num_experts_per_tok)
+        fused_bytes = cost.moe_weight_bytes(n_hi, 0, include_shared=False)
+        rows.append(dict(
+            bench="fused_vs_dual", arch=cfg.name, variant=name,
+            live_rows=n_live, num_slots=b, decode_steps=steps,
+            live_cap=variants[name][1],
+            decode_wall_s=round(walls[name], 4),
+            decode_tok_s=round(steps * n_live / walls[name], 1)
+            if n_live else 0.0,
+            straggler_speedup=(round(speedup, 2)
+                               if name == "half_done_livecap" else None),
+            live_tokens_bitwise=parity, dead_tokens_frozen=frozen,
+            modeled_weight_bytes_fused=int(fused_bytes),
+            modeled_weight_bytes_dual=int(dual_bytes),
+            modeled_traffic_ratio=round(fused_bytes / dual_bytes, 4)))
+    if smoke:
+        assert parity, ("live rows' tokens changed under the ragged "
+                        "live-row grid / live_cap shrink")
+        assert frozen, "a done row's token advanced"
+        try:
+            n_cores = len(os.sched_getaffinity(0))
+        except AttributeError:
+            n_cores = os.cpu_count() or 1
+        if n_cores > 2:
+            assert speedup >= 1.0, \
+                f"straggler batch not cheaper than full batch: " \
+                f"{speedup:.2f}x"
+    return rows
+
+
 def continuous_vs_static_batching(smoke: bool = False) -> List[dict]:
     """Ragged-workload serving throughput: the continuous-batching
     scheduler — PIPELINED (host telemetry replay overlapped with device
@@ -461,6 +572,7 @@ def run(smoke: bool = False) -> List[dict]:
                         weight_mb_per_tok=round(wb_tok / 2**20, 2),
                         kernel_oracle_err=err))
     rows.extend(measured_decode_throughput(smoke=smoke))
+    rows.extend(fused_vs_dual_decode(smoke=smoke))
     rows.extend(continuous_vs_static_batching(smoke=smoke))
     rows.extend(sampled_continuous_serving(smoke=smoke))
     return rows

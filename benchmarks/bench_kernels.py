@@ -23,7 +23,10 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.kernels.quant_matmul.ops import expert_quant_matmul, quant_matmul
+from repro.kernels.quant_matmul.ops import (expert_quant_matmul,
+                                            expert_quant_matmul_fixed,
+                                            expert_quant_matmul_grouped,
+                                            quant_matmul)
 from repro.quant import MixedPrecisionWeights, QuantizedTensor
 
 
@@ -98,8 +101,80 @@ def run_grouped() -> List[dict]:
     return rows
 
 
+def run_fused() -> List[dict]:
+    """Fused single-dispatch dual-buffer kernel vs the two-launch pair it
+    replaces. Reported per (bit-mix, live fraction):
+      * dispatches: 1 vs 2 kernel launches per expert matmul,
+      * weight bytes: each live row-block of a (expert, precision) group
+        streams that expert's packed blob once (the grid is
+        (groups, M/bm, N/bn, K/bk); blocks at/beyond the live-slot
+        watermark skip their weight tiles outright), while the dual path
+        runs every group at FULL capacity — ``weight_bytes_ratio`` is
+        fused/dual, the modeled traffic win for a draining batch,
+      * parity (max |err| of the fused output vs the dual composition on
+        the region slices — bitwise 0.0 for the ref leg by contract).
+    """
+    rng = np.random.default_rng(2)
+    e, cap, k, n = 8, 16, 512, 128
+    w = jnp.asarray(rng.standard_normal((e, k, n)), jnp.float32)
+    rows = []
+    for hi_bits, lo_bits in ((4, 2), (8, 4), (4, 0)):
+        mp = MixedPrecisionWeights.build(w, hi_bits, lo_bits or None, 64)
+        has_lo = mp.low is not None
+        m = 2 * cap if has_lo else cap
+        per_hi = mp.high.nbytes() // e
+        per_lo = (mp.low.nbytes() // e) if has_lo else 0
+        for live_frac in (1.0, 0.5, 0.125):
+            n_live = max(1, int(round(cap * live_frac)))
+            x = np.zeros((e, m, k), np.float32)
+            counts = np.zeros((e, 2), np.int32)
+            for ei in range(e):           # live slots pack from 0
+                counts[ei, 0] = n_live
+                x[ei, :n_live] = rng.standard_normal((n_live, k))
+                if has_lo:
+                    counts[ei, 1] = n_live
+                    x[ei, cap:cap + n_live] = rng.standard_normal(
+                        (n_live, k))
+            x = jnp.asarray(x)
+            cj = jnp.asarray(counts)
+            t_ref, ref = _time_us(expert_quant_matmul_grouped, x, mp, cj,
+                                  cap_hi=cap, impl="ref",
+                                  out_dtype=jnp.float32)
+            t_int, pal = _time_us(expert_quant_matmul_grouped, x, mp, cj,
+                                  cap_hi=cap, impl="pallas", interpret=True,
+                                  block_m=4, block_n=64, block_k=256,
+                                  out_dtype=jnp.float32)
+            y_hi = expert_quant_matmul_fixed(x[:, :cap], mp.high,
+                                             impl="ref",
+                                             out_dtype=jnp.float32)
+            dual = (jnp.concatenate(
+                [y_hi, expert_quant_matmul_fixed(x[:, cap:], mp.low,
+                                                 impl="ref",
+                                                 out_dtype=jnp.float32)],
+                axis=1) if has_lo else y_hi)
+            err_ref = float(jnp.abs(ref - dual).max())
+            err_int = float(jnp.abs(pal - dual).max())
+            bm = 4                       # block_m of the timed call
+            nb_live = -(-n_live // bm)
+            nb_full = -(-cap // bm)
+            fused_bytes = e * nb_live * (per_hi + per_lo)
+            dual_bytes = e * nb_full * (per_hi + per_lo)
+            rows.append(dict(
+                bench="kernels", kernel="expert_quant_matmul_grouped",
+                hi_bits=hi_bits, lo_bits=lo_bits, live_frac=live_frac,
+                dispatches_fused=1, dispatches_dual=2 if has_lo else 1,
+                us_per_call_ref=round(t_ref, 1),
+                us_per_call_interpret=round(t_int, 1),
+                max_err_fused_vs_dual_ref=err_ref,
+                max_err_fused_vs_dual_interpret=err_int,
+                weight_bytes_fused=fused_bytes,
+                weight_bytes_dual=dual_bytes,
+                weight_bytes_ratio=round(fused_bytes / dual_bytes, 4)))
+    return rows
+
+
 def run() -> List[dict]:
-    return run_dense() + run_grouped()
+    return run_dense() + run_grouped() + run_fused()
 
 
 if __name__ == "__main__":

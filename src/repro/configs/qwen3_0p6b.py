@@ -1,5 +1,5 @@
 """Qwen3-0.6B: dense, GQA kv=8, qk-norm [hf:Qwen/Qwen3-8B family]."""
-from repro.models.config import ModelConfig
+from repro.models.config import DyMoEPolicy, ModelConfig
 
 
 def config() -> ModelConfig:
@@ -18,5 +18,8 @@ def config() -> ModelConfig:
         rope_theta=1e6,
         dtype="bfloat16",
         max_seq_len=32768,
+        # edge-sized dm/dff: decode matmuls are a handful of rows against
+        # d_ff=3072, so 128-row tiles would be >75% zero padding
+        dymoe=DyMoEPolicy(block_m=32, block_n=256, block_k=512),
         source="qk_norm, GQA [hf:Qwen/Qwen3-8B]",
     )

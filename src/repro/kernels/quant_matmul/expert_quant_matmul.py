@@ -24,6 +24,13 @@ TPU mapping
   with f32 accumulation).
 * Non-divisible M/N/K are handled by zero-padding in the wrapper: padded
   scale groups are zero, so padded K contributes exactly nothing.
+
+:func:`expert_quant_matmul_grouped_pallas` is the FUSED variant backing the
+dual-buffer per-row MoE dispatch: both precision capacity regions ride in
+one combined buffer and one ``(E * P, M/bm, N/bn, K/bk)`` grid whose
+scalar-prefetch operand is a per-(expert, precision-group) live-slot
+watermark table — the second dispatch, the second weight unpack, and every
+dead row block (finished/evicted/padded slots) disappear from the grid.
 """
 from __future__ import annotations
 
@@ -37,7 +44,7 @@ from jax.experimental.pallas import tpu as pltpu
 
 from repro.kernels.quant_matmul.quant_matmul import _unpack_dequant
 
-__all__ = ["expert_quant_matmul_pallas"]
+__all__ = ["expert_quant_matmul_pallas", "expert_quant_matmul_grouped_pallas"]
 
 
 def _dual_kernel(crit_ref, x_ref, hp_ref, hs_ref, lp_ref, ls_ref, o_ref,
@@ -73,6 +80,57 @@ def _skip_kernel(crit_ref, x_ref, hp_ref, hs_ref, o_ref, acc_ref, *,
         acc_ref[...] = jnp.zeros_like(acc_ref)
 
     @pl.when(crit)  # skipped experts: output stays zero, codes stay packed
+    def _compute():
+        w = _unpack_dequant(hp_ref[0], hs_ref[0], hi_bits, group_size)
+        x = x_ref[0].astype(jnp.float32)
+        acc_ref[...] += jnp.dot(x, w, preferred_element_type=jnp.float32)
+
+    @pl.when(kk == nk - 1)
+    def _done():
+        o_ref[0] = acc_ref[...].astype(o_ref.dtype)
+
+
+def _grouped_dual_kernel(nb_ref, x_ref, hp_ref, hs_ref, lp_ref, ls_ref,
+                         o_ref, acc_ref, *, hi_bits, lo_bits, group_size,
+                         nk):
+    g = pl.program_id(0)
+    i = pl.program_id(1)
+    kk = pl.program_id(3)
+
+    @pl.when(kk == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    # blocks at or beyond the group's live-row watermark: no unpack, no
+    # FLOPs, output stays zero (dead/finished slots are zero-filled by the
+    # dispatch, so skipping reproduces their dot exactly)
+    @pl.when(i < nb_ref[g])
+    def _compute():
+        w = jax.lax.cond(
+            g % 2 == 0,
+            lambda: _unpack_dequant(hp_ref[0], hs_ref[0], hi_bits,
+                                    group_size),
+            lambda: _unpack_dequant(lp_ref[0], ls_ref[0], lo_bits,
+                                    group_size))
+        x = x_ref[0].astype(jnp.float32)
+        acc_ref[...] += jnp.dot(x, w, preferred_element_type=jnp.float32)
+
+    @pl.when(kk == nk - 1)
+    def _done():
+        o_ref[0] = acc_ref[...].astype(o_ref.dtype)
+
+
+def _grouped_skip_kernel(nb_ref, x_ref, hp_ref, hs_ref, o_ref, acc_ref, *,
+                         hi_bits, group_size, nk):
+    g = pl.program_id(0)
+    i = pl.program_id(1)
+    kk = pl.program_id(3)
+
+    @pl.when(kk == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    @pl.when(i < nb_ref[g])
     def _compute():
         w = _unpack_dequant(hp_ref[0], hs_ref[0], hi_bits, group_size)
         x = x_ref[0].astype(jnp.float32)
@@ -201,4 +259,156 @@ def expert_quant_matmul_pallas(
         out_shape=jax.ShapeDtypeStruct((e, mp_, np_), out_dtype),
         interpret=interpret,
     )(crit, *operands)
+    return out[:, :m, :n]
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("cap_hi", "hi_bits", "lo_bits", "group_size",
+                     "block_m", "block_n", "block_k", "interpret",
+                     "out_dtype"),
+)
+def expert_quant_matmul_grouped_pallas(
+        x: jnp.ndarray, hi_packed: jnp.ndarray, hi_scales: jnp.ndarray,
+        lo_packed: Optional[jnp.ndarray], lo_scales: Optional[jnp.ndarray],
+        counts: jnp.ndarray, *, cap_hi: int, hi_bits: int, lo_bits: int,
+        group_size: int, block_m: int = 128, block_n: int = 128,
+        block_k: int = 512, interpret: bool = False,
+        out_dtype=jnp.bfloat16) -> jnp.ndarray:
+    """ONE dispatch over a combined dual-precision capacity buffer with a
+    live-row ragged grid.
+
+    ``x`` (E, M, K) packs BOTH precision regions of the dual-buffer per-row
+    MoE dispatch per expert: high-precision slots occupy ``[0, cap_hi)``
+    and low-precision slots ``[cap_hi, M)``. The grid is
+    ``(E * P, M_region/bm, N/bn, K/bk)`` with P precision groups (2, or 1
+    when ``lo_packed is None`` — the "4/0" lo group is elided at grid
+    construction): each grid step streams exactly one precision's packed
+    codes, so both buffers execute in a single ``pallas_call`` with no
+    second dispatch and no second weight unpack.
+
+    ``counts`` (E, 2) int32 are per-(expert, precision-group) live-slot
+    watermarks: a group's m-blocks at or beyond ``ceil(count/bm)`` are
+    DEAD — their x/weight index maps pin to block (0, 0, 0) (consecutive
+    identical block indices elide the DMA) and the kernel body skips the
+    unpack + MXU work outright, so finished/evicted/padded rows cost no
+    FLOPs and no weight I/O. Contract: slots at or beyond a group's
+    watermark must be zero-filled (the dispatch scatter guarantees this),
+    so a skipped block's zero output equals its dot exactly.
+
+    Returns (E, M, N) in ``out_dtype``, region layout matching ``x``.
+    """
+    e, m, k = x.shape
+    n = hi_packed.shape[1]
+    vpb_hi = 8 // hi_bits
+    assert hi_packed.shape == (e, n, k // vpb_hi), (hi_packed.shape, e, n, k)
+    assert hi_scales.shape == (e, k // group_size, n)
+    has_lo = lo_packed is not None
+    cap_lo = m - cap_hi
+    assert 0 < cap_hi <= m, (cap_hi, m)
+    assert has_lo == (cap_lo > 0), (cap_hi, m, has_lo)
+    if has_lo:
+        vpb_lo = 8 // lo_bits
+        assert lo_packed.shape == (e, n, k // vpb_lo)
+        assert lo_scales.shape == (e, k // group_size, n)
+    p_ = 2 if has_lo else 1
+
+    cap = max(cap_hi, cap_lo)
+    bm, bn, bk = min(block_m, cap), min(block_n, n), min(block_k, k)
+    bk = max(group_size, (bk // group_size) * group_size)
+    assert k % group_size == 0, (k, group_size)
+
+    # both regions are padded to the SAME m-block count so every group's
+    # output tile index stays in range regardless of the cap split
+    nb_cap = -(-cap // bm)
+    rows = nb_cap * bm
+
+    def region(lo_, hi_):
+        r = x[:, lo_:hi_]
+        pad = rows - r.shape[1]
+        return jnp.pad(r, ((0, 0), (0, pad), (0, 0))) if pad else r
+
+    xr = region(0, cap_hi)
+    if has_lo:
+        xr = jnp.concatenate([xr, region(cap_hi, m)], axis=1)
+    xp = _pad_to(xr, 2, bk)
+    hp = _pad_to(_pad_to(hi_packed, 1, bn), 2, bk // vpb_hi)
+    hs = _pad_to(_pad_to(hi_scales, 1, bk // group_size), 2, bn)
+    if has_lo:
+        lp = _pad_to(_pad_to(lo_packed, 1, bn), 2, bk // vpb_lo)
+        ls = _pad_to(_pad_to(lo_scales, 1, bk // group_size), 2, bn)
+    kp_ = xp.shape[2]
+    np_ = hp.shape[1]
+    nk = kp_ // bk
+    grid = (e * p_, nb_cap, np_ // bn, nk)
+
+    # (E, P) watermarks -> (E*P,) live m-block counts, the scalar-prefetch
+    # table every index map consults
+    caps = jnp.asarray((cap_hi, cap_lo)[:p_], jnp.int32)
+    wm = jnp.clip(jnp.asarray(counts, jnp.int32)[:, :p_], 0, caps[None, :])
+    nb = ((wm + bm - 1) // bm).reshape(-1)
+
+    def x_map(g, i, j, kk, t):
+        use = i < t[g]
+        return (jnp.where(use, g // p_, 0),
+                jnp.where(use, (g % p_) * nb_cap + i, 0),
+                jnp.where(use, kk, 0))
+
+    def hi_map(g, i, j, kk, t):
+        use = (g % p_ == 0) & (i < t[g])
+        return (jnp.where(use, g // p_, 0), jnp.where(use, j, 0),
+                jnp.where(use, kk, 0))
+
+    def hi_s_map(g, i, j, kk, t):
+        use = (g % p_ == 0) & (i < t[g])
+        return (jnp.where(use, g // p_, 0), jnp.where(use, kk, 0),
+                jnp.where(use, j, 0))
+
+    def lo_map(g, i, j, kk, t):
+        use = (g % p_ == 1) & (i < t[g])
+        return (jnp.where(use, g // p_, 0), jnp.where(use, j, 0),
+                jnp.where(use, kk, 0))
+
+    def lo_s_map(g, i, j, kk, t):
+        use = (g % p_ == 1) & (i < t[g])
+        return (jnp.where(use, g // p_, 0), jnp.where(use, kk, 0),
+                jnp.where(use, j, 0))
+
+    in_specs = [
+        pl.BlockSpec((1, bm, bk), x_map),
+        pl.BlockSpec((1, bn, bk // vpb_hi), hi_map),
+        pl.BlockSpec((1, bk // group_size, bn), hi_s_map),
+    ]
+    operands = [xp, hp, hs]
+    if has_lo:
+        in_specs += [
+            pl.BlockSpec((1, bn, bk // vpb_lo), lo_map),
+            pl.BlockSpec((1, bk // group_size, bn), lo_s_map),
+        ]
+        operands += [lp, ls]
+        kernel = functools.partial(_grouped_dual_kernel, hi_bits=hi_bits,
+                                   lo_bits=lo_bits, group_size=group_size,
+                                   nk=nk)
+    else:
+        kernel = functools.partial(_grouped_skip_kernel, hi_bits=hi_bits,
+                                   group_size=group_size, nk=nk)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=grid,
+        in_specs=in_specs,
+        out_specs=pl.BlockSpec(
+            (1, bm, bn),
+            lambda g, i, j, kk, t: (g // p_, (g % p_) * nb_cap + i, j)),
+        scratch_shapes=[pltpu.VMEM((bm, bn), jnp.float32)],
+    )
+    out = pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((e, p_ * rows, np_), out_dtype),
+        interpret=interpret,
+    )(nb, *operands)
+    if has_lo:
+        return jnp.concatenate(
+            [out[:, :cap_hi, :n], out[:, rows:rows + cap_lo, :n]], axis=1)
     return out[:, :m, :n]

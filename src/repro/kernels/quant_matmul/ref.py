@@ -24,7 +24,9 @@ import jax.numpy as jnp
 from repro.quant.quantize import dequantize_tensor
 
 __all__ = ["quant_matmul_ref", "expert_quant_matmul_ref",
-           "expert_quant_matmul_rows_ref", "expert_quant_matmul_fixed_ref"]
+           "expert_quant_matmul_rows_ref", "expert_quant_matmul_fixed_ref",
+           "expert_quant_matmul_grouped_ref",
+           "expert_quant_matmul_grouped_rows_ref"]
 
 
 def quant_matmul_ref(x: jnp.ndarray, packed: jnp.ndarray, scales: jnp.ndarray,
@@ -95,6 +97,77 @@ def expert_quant_matmul_fixed_ref(
     _, y = jax.lax.scan(one, None, (x, packed, scales),
                         unroll=x.shape[0])
     return y.astype(out_dtype)
+
+
+def expert_quant_matmul_grouped_ref(
+        x: jnp.ndarray, hi_packed: jnp.ndarray, hi_scales: jnp.ndarray,
+        lo_packed: Optional[jnp.ndarray], lo_scales: Optional[jnp.ndarray],
+        *, cap_hi: int, hi_bits: int, lo_bits: int, group_size: int,
+        out_dtype=jnp.bfloat16) -> jnp.ndarray:
+    """Single-pass oracle for the fused grouped kernel: ``x`` (E, M, K) is
+    ONE combined capacity buffer per expert — high-precision slots in
+    ``[0, cap_hi)``, low-precision slots in ``[cap_hi, M)``. Each expert
+    streams once and each precision's codes unpack once; the two
+    region-sliced dots have exactly the dual-dispatch path's operand
+    shapes and values, so the fused output is BITWISE the composition of
+    the two :func:`expert_quant_matmul_fixed_ref` calls it replaces.
+    ``lo_packed is None`` ("4/0"): ``cap_hi == M`` and the graph IS the
+    fixed-precision oracle's."""
+    if lo_packed is None:
+        assert cap_hi == x.shape[1], (cap_hi, x.shape)
+        return expert_quant_matmul_fixed_ref(
+            x, hi_packed, hi_scales, bits=hi_bits, group_size=group_size,
+            out_dtype=out_dtype)
+
+    def one(carry, args):
+        xe, hp, hs, lp, ls = args
+        w_hi = dequantize_tensor(hp, hs, hi_bits, group_size, jnp.float32)
+        y_hi = jnp.dot(xe[:cap_hi].astype(jnp.float32), w_hi,
+                       preferred_element_type=jnp.float32)
+        w_lo = dequantize_tensor(lp, ls, lo_bits, group_size, jnp.float32)
+        y_lo = jnp.dot(xe[cap_hi:].astype(jnp.float32), w_lo,
+                       preferred_element_type=jnp.float32)
+        return carry, jnp.concatenate([y_hi, y_lo], axis=0)
+
+    _, y = jax.lax.scan(one, None, (x, hi_packed, hi_scales, lo_packed,
+                                    lo_scales), unroll=x.shape[0])
+    return y.astype(out_dtype)
+
+
+def expert_quant_matmul_grouped_rows_ref(
+        x: jnp.ndarray, hi_packed: jnp.ndarray, hi_scales: jnp.ndarray,
+        lo_packed: Optional[jnp.ndarray], lo_scales: Optional[jnp.ndarray],
+        *, cap_hi: int, hi_bits: int, lo_bits: int, group_size: int,
+        out_dtype=jnp.bfloat16) -> jnp.ndarray:
+    """Row-batched twin of :func:`expert_quant_matmul_grouped_ref` for
+    callers that vmap a per-slot program over the combined buffer:
+    x (B, E, M, K) -> (B, E, M, N). Weights carry no batch dim; each
+    expert's codes unpack exactly once per precision, amortized over all
+    B rows (same rationale as :func:`expert_quant_matmul_rows_ref`)."""
+    xt = jnp.moveaxis(x, 1, 0)                            # (E, B, M, K)
+
+    def mm(xe, packed, scales, bits):
+        w = dequantize_tensor(packed, scales, bits, group_size, jnp.float32)
+        return jnp.einsum("bmk,kn->bmn", xe.astype(jnp.float32), w,
+                          preferred_element_type=jnp.float32)
+
+    if lo_packed is None:
+        assert cap_hi == x.shape[2], (cap_hi, x.shape)
+
+        def one(args):
+            xe, hp, hs = args
+            return mm(xe, hp, hs, hi_bits)
+        xs = (xt, hi_packed, hi_scales)
+    else:
+        def one(args):
+            xe, hp, hs, lp, ls = args
+            return jnp.concatenate(
+                [mm(xe[:, :cap_hi], hp, hs, hi_bits),
+                 mm(xe[:, cap_hi:], lp, ls, lo_bits)], axis=1)
+        xs = (xt, hi_packed, hi_scales, lo_packed, lo_scales)
+    _, y = jax.lax.scan(lambda c, a: (c, one(a)), None, xs,
+                        unroll=xt.shape[0])
+    return jnp.moveaxis(y, 1, 0).astype(out_dtype)        # (B, E, M, N)
 
 
 def expert_quant_matmul_rows_ref(

@@ -60,19 +60,36 @@ def init_kv_cache(batch: int, num_kv_heads: int, slots: int, head_dim: int,
     )
 
 
-def update_kv_cache(cache: KVCache, k_new: jnp.ndarray, v_new: jnp.ndarray
-                    ) -> KVCache:
-    """Insert one decode step. k_new/v_new: (B, H_kv, 1, D)."""
+def update_kv_cache(cache: KVCache, k_new: jnp.ndarray, v_new: jnp.ndarray,
+                    live: Optional[jnp.ndarray] = None) -> KVCache:
+    """Insert one decode step. k_new/v_new: (B, H_kv, 1, D).
+
+    ``live`` (B,) bool: False rows are FROZEN — their frontier slot keeps
+    its old contents and their position marker / length don't advance, so
+    finished or evicted slots in a continuous batch stop growing their
+    window. The masking happens at the write site (one (B, H, D) select
+    against the gathered old slot values), never as a whole-cache
+    ``where``."""
     b, _, slots, _ = cache.k.shape
     pos = cache.length  # (B,) logical position of the incoming token
     frontier = pos + cache.offset  # (B,) slot index it occupies
     slot = frontier % slots if cache.ring \
         else jnp.minimum(frontier, slots - 1)
     bidx = jnp.arange(b)
-    k = cache.k.at[bidx, :, slot].set(k_new[:, :, 0].astype(cache.k.dtype))
-    v = cache.v.at[bidx, :, slot].set(v_new[:, :, 0].astype(cache.v.dtype))
-    positions = cache.positions.at[bidx, slot].set(pos)
-    return KVCache(k=k, v=v, positions=positions, length=cache.length + 1,
+    kw = k_new[:, :, 0].astype(cache.k.dtype)
+    vw = v_new[:, :, 0].astype(cache.v.dtype)
+    pw = pos
+    length = cache.length + 1
+    if live is not None:
+        lv = jnp.asarray(live).astype(bool)
+        kw = jnp.where(lv[:, None, None], kw, cache.k[bidx, :, slot])
+        vw = jnp.where(lv[:, None, None], vw, cache.v[bidx, :, slot])
+        pw = jnp.where(lv, pos, cache.positions[bidx, slot])
+        length = jnp.where(lv, length, cache.length)
+    k = cache.k.at[bidx, :, slot].set(kw)
+    v = cache.v.at[bidx, :, slot].set(vw)
+    positions = cache.positions.at[bidx, slot].set(pw)
+    return KVCache(k=k, v=v, positions=positions, length=length,
                    offset=cache.offset, ring=cache.ring)
 
 

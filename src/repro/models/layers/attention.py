@@ -153,13 +153,17 @@ def attention_train(p, cfg: ModelConfig, x: jnp.ndarray, *,
     return out, token_importance, (k, v)
 
 
-def attention_decode(p, cfg: ModelConfig, x: jnp.ndarray, cache: KVCache
+def attention_decode(p, cfg: ModelConfig, x: jnp.ndarray, cache: KVCache,
+                     live: Optional[jnp.ndarray] = None
                      ) -> Tuple[jnp.ndarray, KVCache]:
-    """One-token decode. x: (B, 1, dm)."""
+    """One-token decode. x: (B, 1, dm). ``live`` (B,) freezes finished
+    rows' cache writes (see :func:`update_kv_cache`); their attention
+    output is computed against the unchanged window and discarded by the
+    caller."""
     b = x.shape[0]
     positions = cache.length[:, None]  # (B, 1) absolute position of new token
     q, k_new, v_new = _project_qkv(p, cfg, x, positions)
-    cache = update_kv_cache(cache, k_new, v_new)
+    cache = update_kv_cache(cache, k_new, v_new, live=live)
 
     cdt = jnp.dtype(cfg.attn_compute_dtype)
     scale = cfg.head_dim ** -0.5

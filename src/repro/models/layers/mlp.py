@@ -55,9 +55,14 @@ def mlp_quantized(qp, cfg: ModelConfig, x: jnp.ndarray,
     "x/0": the FFN output zeroes and the residual passes the layer through)
     otherwise — every matmul runs straight from the packed buffer.
     """
+    pol = cfg.dymoe
+
     def mm(name, h):
         return mixed_precision_matmul(h, qp[name], critical,
-                                      skip_to_zero=True, out_dtype=x.dtype)
+                                      skip_to_zero=True, out_dtype=x.dtype,
+                                      block_m=pol.block_m,
+                                      block_n=pol.block_n,
+                                      block_k=pol.block_k)
 
     if cfg.mlp_type == "swiglu":
         h = jax.nn.silu(mm("w_gate", x)) * mm("w_up", x)

@@ -107,17 +107,50 @@ def _expert_ffn(w_gate, w_up, w_down, xb: jnp.ndarray) -> jnp.ndarray:
     return jnp.einsum("ecf,efd->ecd", h, w_down)
 
 
-def _expert_ffn_fixed(qweights: dict, prec: str, xb: jnp.ndarray
-                      ) -> jnp.ndarray:
+def _moe_blocks(cfg: ModelConfig) -> dict:
+    """Pallas tile sizes for the grouped expert matmuls, from the config
+    (edge-sized d_model/d_ff configs override the 128/128/512 defaults so
+    tiny capacity buffers don't pad to oversized tiles)."""
+    pol = cfg.dymoe
+    return dict(block_m=pol.block_m, block_n=pol.block_n,
+                block_k=pol.block_k)
+
+
+def _expert_ffn_fixed(qweights: dict, prec: str, xb: jnp.ndarray,
+                      blocks: Optional[dict] = None) -> jnp.ndarray:
     """SwiGLU with EVERY expert at one fixed precision (``prec`` ∈
     {"high", "low"}) — branch-free grouped streaming; the capacity buffer
     already encodes the per-token precision selection. Shared by both
-    dual-buffer dispatches (decode rows and prefill rows)."""
+    dual-buffer dispatches (decode rows and prefill rows); kept as the
+    bit-parity oracle of the fused single-dispatch path
+    (:func:`_expert_ffn_grouped`)."""
     from repro.kernels.quant_matmul.ops import expert_quant_matmul_fixed
 
     def mm(name, h):
         return expert_quant_matmul_fixed(h, getattr(qweights[name], prec),
-                                         out_dtype=xb.dtype)
+                                         out_dtype=xb.dtype,
+                                         **(blocks or {}))
+
+    h = jax.nn.silu(mm("w_gate", xb)) * mm("w_up", xb)
+    return mm("w_down", h)
+
+
+def _expert_ffn_grouped(qweights: dict, xb: jnp.ndarray,
+                        counts: jnp.ndarray, *, cap_hi: int,
+                        blocks: Optional[dict] = None) -> jnp.ndarray:
+    """SwiGLU over ONE combined dual-precision capacity buffer: each
+    matmul is a single fused grouped dispatch walking the high region
+    ``[0, cap_hi)`` and the low region ``[cap_hi, M)`` in one grid —
+    instead of one dispatch per precision — and ``counts`` (E, 2)
+    live-slot watermarks let the kernel skip dead row blocks outright
+    (finished/evicted/padded slots cost no FLOPs and no weight I/O)."""
+    from repro.kernels.quant_matmul.ops import expert_quant_matmul_grouped
+
+    def mm(name, h):
+        return expert_quant_matmul_grouped(h, qweights[name], counts,
+                                           cap_hi=cap_hi,
+                                           out_dtype=xb.dtype,
+                                           **(blocks or {}))
 
     h = jax.nn.silu(mm("w_gate", xb)) * mm("w_up", xb)
     return mm("w_down", h)
@@ -130,8 +163,8 @@ def _shared_experts(p, x: jnp.ndarray) -> jnp.ndarray:
     return jnp.einsum("etf,efd->td", hs, p["shared_w_down"])
 
 
-def _expert_ffn_quantized(qw: dict, critical: jnp.ndarray, xb: jnp.ndarray
-                          ) -> jnp.ndarray:
+def _expert_ffn_quantized(qw: dict, critical: jnp.ndarray, xb: jnp.ndarray,
+                          blocks: Optional[dict] = None) -> jnp.ndarray:
     """xb: (E, C, dm) -> (E, C, dm), every matmul executed straight from the
     packed buffer ``critical`` selects (grouped expert quant-matmul) — no
     dense (E, dm, dff) dequantized weight is ever materialized. In the
@@ -139,7 +172,8 @@ def _expert_ffn_quantized(qw: dict, critical: jnp.ndarray, xb: jnp.ndarray
     kernel, so a skipped expert contributes exactly nothing."""
     def mm(name, h):
         return mixed_precision_matmul(h, qw[name], critical,
-                                      skip_to_zero=True, out_dtype=xb.dtype)
+                                      skip_to_zero=True, out_dtype=xb.dtype,
+                                      **(blocks or {}))
     h = jax.nn.silu(mm("w_gate", xb)) * mm("w_up", xb)
     return mm("w_down", h)
 
@@ -193,7 +227,8 @@ def moe_apply(p, cfg: ModelConfig, x: jnp.ndarray, *,
 
     if critical_mask is not None:
         assert qweights is not None
-        yb = _expert_ffn_quantized(qweights, critical_mask, buf)  # (E, C, dm)
+        yb = _expert_ffn_quantized(qweights, critical_mask, buf,
+                                   _moe_blocks(cfg))          # (E, C, dm)
     else:
         yb = _expert_ffn(p["w_gate"], p["w_up"], p["w_down"], buf)
 
@@ -241,23 +276,42 @@ def moe_apply(p, cfg: ModelConfig, x: jnp.ndarray, *,
 
 
 def moe_apply_rows(p, cfg: ModelConfig, x: jnp.ndarray,
-                   critical_rows: jnp.ndarray, qweights: dict
-                   ) -> Tuple[jnp.ndarray, dict]:
+                   critical_rows: jnp.ndarray, qweights: dict, *,
+                   live: Optional[jnp.ndarray] = None,
+                   capacity: Optional[int] = None,
+                   fused: bool = True) -> Tuple[jnp.ndarray, dict]:
     """Decode-time MoE where every row carries its OWN Critical mask.
 
     The continuous-batching decode needs per-request precision selection
     (a shared batch-mean mask would make a request's tokens depend on its
     batch neighbours). Naively that means one expert dispatch per row —
-    B× the weight unpacking. Instead tokens are dispatched to one of TWO
-    shared capacity buffers per expert — a high-precision buffer and a
-    low-precision one — keyed by what the token's row selected for that
-    expert, and each buffer runs ONE grouped quant-matmul at a fixed
-    precision. Per-row precision semantics, batch-shared execution: the
-    weights are unpacked once per precision stream regardless of B, and
-    each token's math is bit-identical to the solo (B=1) path. Under
-    "4/0" (``low is None``) the low buffer is skipped outright — exact
-    zeros, no I/O, matching the solo kernel's zeroing of sub-critical
-    experts.
+    B× the weight unpacking. Instead tokens are dispatched into TWO
+    precision regions of ONE shared capacity buffer per expert — high
+    slots then low slots — keyed by what the token's row selected for
+    that expert, and the whole buffer runs a SINGLE fused grouped
+    quant-matmul per expert matmul (:func:`_expert_ffn_grouped`): both
+    precision streams execute in one kernel grid, each unpacked once
+    regardless of B, and each token's math is bit-identical to the solo
+    (B=1) path. Under "4/0" (``low is None``) the low region is never
+    built and its precision group is elided from the grid — exact zeros,
+    no I/O, matching the solo kernel's zeroing of sub-critical experts.
+
+    ``live`` (B,) bool marks rows whose token is real: finished, evicted,
+    or padded rows' tokens take NO capacity slot, and the per-expert
+    occupancy watermarks handed to the kernel make their row blocks
+    generate no grid steps — a done-mask translates into skipped FLOPs
+    and skipped weight I/O, not just zeroed telemetry. Dead rows' y is
+    exact zero (their logits/stats are garbage by contract — the batched
+    decode freezes their token and masks their telemetry). ``capacity``
+    (static, requires ``live``) shrinks each precision region from B to
+    the chunk's live-row bound: an (expert, precision) pair can receive
+    at most one slot per LIVE row, so ``capacity >= live_count`` can
+    never drop a token — buffer memory and the dispatch scatter shrink
+    with occupancy.
+
+    ``fused=False`` keeps the original two-dispatch path (one grouped
+    matmul per precision buffer) as the bit-parity oracle the fused path
+    is tested against.
 
     x: (B, dm) one token per row; critical_rows: (B, E) bool.
     Returns (y (B, dm), per-row stats: {"active" (B, E) bool,
@@ -265,9 +319,12 @@ def moe_apply_rows(p, cfg: ModelConfig, x: jnp.ndarray,
     """
     b, dm = x.shape
     e, k = cfg.num_experts, cfg.num_experts_per_tok
-    c = b  # an (expert, precision) pair can receive at most one slot per
-    #        row, so capacity b can NEVER drop a token (parity with solo
-    #        decode, which never drops its single token)
+    if capacity is None:
+        c = b
+    else:
+        assert live is not None, \
+            "capacity < B requires the live mask that bounds occupancy"
+        c = max(1, min(int(capacity), b))
 
     logits = x.astype(jnp.float32) @ p["wg_router"]      # (B, E)
     probs = jax.nn.softmax(logits, axis=-1)
@@ -278,28 +335,62 @@ def moe_apply_rows(p, cfg: ModelConfig, x: jnp.ndarray,
     flat_e = idx.reshape(-1)                             # (B*k,)
     flat_c = crit_tok.reshape(-1)
     oh = jax.nn.one_hot(flat_e, e, dtype=jnp.int32)      # (B*k, E)
+    if live is not None:
+        live_rep = jnp.repeat(jnp.asarray(live).astype(bool), k)
+        sel_hi = flat_c & live_rep
+        sel_lo = ~flat_c & live_rep
+    else:
+        sel_hi, sel_lo = flat_c, ~flat_c
+    tok = jnp.repeat(jnp.arange(b), k)
 
-    def dispatch(select):
+    def place(select):
+        """Slot index inside the (expert, precision-stream) capacity
+        region plus the per-expert occupancy count; selected tokens pack
+        from slot 0, so the count IS the kernel's live-slot watermark."""
         ohs = oh * select[:, None].astype(oh.dtype)
         pos = jnp.cumsum(ohs, axis=0) - 1
         pos_in_e = jnp.take_along_axis(pos, flat_e[:, None], axis=1)[:, 0]
-        slot = jnp.clip(pos_in_e, 0, c - 1)
-        tok = jnp.repeat(jnp.arange(b), k)
-        xb = jnp.where(select[:, None], x[tok], 0)
-        buf = jnp.zeros((e, c, dm), x.dtype).at[flat_e, slot].add(
-            xb.astype(x.dtype), mode="drop")
-        return buf, slot
+        return jnp.clip(pos_in_e, 0, c - 1), jnp.minimum(ohs.sum(axis=0), c)
 
-    buf_hi, slot_hi = dispatch(flat_c)
-    y_hi = _expert_ffn_fixed(qweights, "high", buf_hi)
     skip_low = qweights["w_gate"].low is None            # "4/0"
-    if skip_low:
-        ye = jnp.where(flat_c[:, None], y_hi[flat_e, slot_hi], 0.0)
+    blocks = _moe_blocks(cfg)
+    slot_hi, n_hi = place(sel_hi)
+    xb_hi = jnp.where(sel_hi[:, None], x[tok], 0)
+    if fused:
+        width = c if skip_low else 2 * c
+        buf = jnp.zeros((e, width, dm), x.dtype).at[flat_e, slot_hi].add(
+            xb_hi.astype(x.dtype), mode="drop")
+        if skip_low:
+            counts = jnp.stack([n_hi, jnp.zeros_like(n_hi)], axis=1)
+            yb = _expert_ffn_grouped(qweights, buf, counts, cap_hi=c,
+                                     blocks=blocks)
+            ye = jnp.where(sel_hi[:, None], yb[flat_e, slot_hi], 0.0)
+        else:
+            slot_lo, n_lo = place(sel_lo)
+            xb_lo = jnp.where(sel_lo[:, None], x[tok], 0)
+            buf = buf.at[flat_e, c + slot_lo].add(xb_lo.astype(x.dtype),
+                                                  mode="drop")
+            counts = jnp.stack([n_hi, n_lo], axis=1)
+            yb = _expert_ffn_grouped(qweights, buf, counts, cap_hi=c,
+                                     blocks=blocks)
+            ye = jnp.where(sel_hi[:, None], yb[flat_e, slot_hi],
+                           jnp.where(sel_lo[:, None],
+                                     yb[flat_e, c + slot_lo], 0.0))
     else:
-        buf_lo, slot_lo = dispatch(~flat_c)
-        y_lo = _expert_ffn_fixed(qweights, "low", buf_lo)
-        ye = jnp.where(flat_c[:, None], y_hi[flat_e, slot_hi],
-                       y_lo[flat_e, slot_lo])
+        buf_hi = jnp.zeros((e, c, dm), x.dtype).at[flat_e, slot_hi].add(
+            xb_hi.astype(x.dtype), mode="drop")
+        y_hi = _expert_ffn_fixed(qweights, "high", buf_hi, blocks)
+        if skip_low:
+            ye = jnp.where(sel_hi[:, None], y_hi[flat_e, slot_hi], 0.0)
+        else:
+            slot_lo, _ = place(sel_lo)
+            xb_lo = jnp.where(sel_lo[:, None], x[tok], 0)
+            buf_lo = jnp.zeros((e, c, dm), x.dtype).at[
+                flat_e, slot_lo].add(xb_lo.astype(x.dtype), mode="drop")
+            y_lo = _expert_ffn_fixed(qweights, "low", buf_lo, blocks)
+            ye = jnp.where(sel_hi[:, None], y_hi[flat_e, slot_hi],
+                           jnp.where(sel_lo[:, None],
+                                     y_lo[flat_e, slot_lo], 0.0))
     ye = ye * gates.reshape(-1, 1).astype(x.dtype)
     y = ye.reshape(b, k, dm).sum(axis=1)
 
@@ -322,6 +413,7 @@ def moe_apply_prefill_rows(p, cfg: ModelConfig, x: jnp.ndarray,
                            hh_mask: Optional[jnp.ndarray] = None,
                            token_valid: Optional[jnp.ndarray] = None,
                            row_capacities: Optional[jnp.ndarray] = None,
+                           fused: bool = True,
                            ) -> Tuple[jnp.ndarray, dict]:
     """Prefill-shaped MoE where every ROW carries its own Critical mask —
     :func:`moe_apply_rows`' dual-buffer trick at prefill shapes.
@@ -330,11 +422,17 @@ def moe_apply_prefill_rows(p, cfg: ModelConfig, x: jnp.ndarray,
     Critical set, request A's importance profile would pick request B's
     expert precisions and B's tokens would stop matching its solo prefill.
     Instead each token inherits its ROW's (rows, E) mask and is dispatched
-    into one of TWO per-row capacity regions per expert — a high-precision
-    buffer and a low-precision one — and each buffer runs ONE grouped
-    fixed-precision quant-matmul (``expert_quant_matmul_fixed``), so
-    weights still unpack once per precision stream regardless of how many
-    admissions share the batch.
+    into one of TWO precision regions — row-local high-precision slots and
+    row-local low-precision slots — of ONE combined capacity buffer per
+    expert, and every expert matmul is a SINGLE fused grouped dispatch
+    (``expert_quant_matmul_grouped``) walking both regions in one kernel
+    grid, so weights still unpack once per precision stream regardless of
+    how many admissions share the batch and the second dispatch of the
+    old per-precision pair is gone. Per-(expert, region) occupancy
+    watermarks let the kernel skip slot blocks beyond the highest
+    occupied slot — padded tokens of a ragged admission wave cost no
+    FLOPs and no weight I/O. ``fused=False`` keeps the original
+    two-dispatch path as the bit-parity oracle.
 
     Solo-parity details the scheduler's admission path relies on:
       * capacity is enforced PER ROW at the row's own solo budget
@@ -414,19 +512,58 @@ def moe_apply_prefill_rows(p, cfg: ModelConfig, x: jnp.ndarray,
 
     sel_hi = flat_c & valid_rep
     sel_lo = ~flat_c & valid_rep
-    buf_hi, slot_hi, keep_hi = dispatch(sel_hi)
-    y_hi = _expert_ffn_fixed(qweights, "high", buf_hi)
-    ye_hi = jnp.where(keep_hi[:, None], y_hi[flat_e, slot_hi], 0.0)
     skip_low = qweights["w_gate"].low is None            # "4/0"
-    if skip_low:
-        ye = ye_hi
-        _, keep_lo = stream_pos(sel_lo)  # stats only: solo counts these
+    blocks = _moe_blocks(cfg)
+    if fused:
+        cap = b * cmax
+
+        def watermark(keep, slot):
+            """Highest occupied slot + 1 per expert — regions are
+            row-local here (not packed from 0), so the watermark, not the
+            occupancy count, bounds the kernel's live blocks."""
+            return jnp.zeros((e,), jnp.int32).at[flat_e].max(
+                jnp.where(keep, slot + 1, 0).astype(jnp.int32),
+                mode="drop")
+
+        pos_hi, keep_hi = stream_pos(sel_hi)
+        slot_hi = row_rep * cmax + jnp.clip(pos_hi, 0, cmax - 1)
+        xbh = jnp.where(keep_hi[:, None], x[tok_of], 0)
+        width = cap if skip_low else 2 * cap
+        buf = jnp.zeros((e, width, dm), x.dtype).at[flat_e, slot_hi].add(
+            xbh.astype(x.dtype), mode="drop")
+        if skip_low:
+            counts = jnp.stack([watermark(keep_hi, slot_hi),
+                                jnp.zeros((e,), jnp.int32)], axis=1)
+            y_all = _expert_ffn_grouped(qweights, buf, counts, cap_hi=cap,
+                                        blocks=blocks)
+            ye = jnp.where(keep_hi[:, None], y_all[flat_e, slot_hi], 0.0)
+            _, keep_lo = stream_pos(sel_lo)  # stats only: solo counts these
+        else:
+            pos_lo, keep_lo = stream_pos(sel_lo)
+            slot_lo = row_rep * cmax + jnp.clip(pos_lo, 0, cmax - 1)
+            xbl = jnp.where(keep_lo[:, None], x[tok_of], 0)
+            buf = buf.at[flat_e, cap + slot_lo].add(xbl.astype(x.dtype),
+                                                    mode="drop")
+            counts = jnp.stack([watermark(keep_hi, slot_hi),
+                                watermark(keep_lo, slot_lo)], axis=1)
+            y_all = _expert_ffn_grouped(qweights, buf, counts, cap_hi=cap,
+                                        blocks=blocks)
+            ye = jnp.where(keep_hi[:, None], y_all[flat_e, slot_hi],
+                           jnp.where(keep_lo[:, None],
+                                     y_all[flat_e, cap + slot_lo], 0.0))
     else:
-        buf_lo, slot_lo, keep_lo = dispatch(sel_lo)
-        y_lo = _expert_ffn_fixed(qweights, "low", buf_lo)
-        ye = jnp.where(flat_c[:, None], ye_hi,
-                       jnp.where(keep_lo[:, None], y_lo[flat_e, slot_lo],
-                                 0.0))
+        buf_hi, slot_hi, keep_hi = dispatch(sel_hi)
+        y_hi = _expert_ffn_fixed(qweights, "high", buf_hi, blocks)
+        ye_hi = jnp.where(keep_hi[:, None], y_hi[flat_e, slot_hi], 0.0)
+        if skip_low:
+            ye = ye_hi
+            _, keep_lo = stream_pos(sel_lo)  # stats only
+        else:
+            buf_lo, slot_lo, keep_lo = dispatch(sel_lo)
+            y_lo = _expert_ffn_fixed(qweights, "low", buf_lo, blocks)
+            ye = jnp.where(flat_c[:, None], ye_hi,
+                           jnp.where(keep_lo[:, None],
+                                     y_lo[flat_e, slot_lo], 0.0))
     ye = ye * gates.reshape(-1, 1).astype(x.dtype)
     y = ye.reshape(t, k, dm).sum(axis=1)
 

@@ -635,17 +635,28 @@ def init_decode_state(cfg: ModelConfig, batch: int, seq_len: int) -> Any:
 def decode_step(params, cfg: ModelConfig, tokens: jnp.ndarray,
                 caches: Any, *, qparams: Optional[dict] = None,
                 per_row_moe: bool = False,
+                live_rows: Optional[jnp.ndarray] = None,
+                moe_capacity: Optional[int] = None,
                 ) -> Tuple[jnp.ndarray, Any, DyMoEInfo]:
     """One decode step. tokens: (B,) int32. Returns (logits (B, V) f32,
     caches, DyMoEInfo with gate-guided importance + Eq. 8 predictions).
 
     ``per_row_moe`` (continuous-batching mode): the gate-guided Critical
     set (Eq. 3) is selected PER ROW instead of from the batch-mean gate,
-    experts execute through the dual-buffer :func:`moe_apply_rows` (so a
-    row's precision — and its tokens — never depend on batch neighbours,
-    while weights still unpack once per precision stream, not per row),
-    and the telemetry leaves come back per row: (B, L, E) instead of
-    (L, E). Non-MoE archs are row-independent either way."""
+    experts execute through the fused single-dispatch
+    :func:`moe_apply_rows` (so a row's precision — and its tokens — never
+    depend on batch neighbours, while weights still unpack once per
+    precision stream, not per row), and the telemetry leaves come back
+    per row: (B, L, E) instead of (L, E). Non-MoE archs are
+    row-independent either way.
+
+    ``live_rows`` (B,) bool marks rows that are really decoding: dead
+    (finished/evicted/empty) rows take no MoE capacity slots — the fused
+    kernel's ragged grid skips their FLOPs and weight I/O — and their KV
+    writes freeze. Dead rows' logits are garbage by contract; the batched
+    caller re-feeds their token unchanged and masks their telemetry.
+    ``moe_capacity`` (static, requires ``live_rows``) bounds each MoE
+    precision region to the chunk's live-row count instead of B."""
     dt = _dtype(cfg)
     kind = cfg.block_kinds()[0]
     hybrid = bool(cfg.shared_attn_every)
@@ -685,7 +696,7 @@ def decode_step(params, cfg: ModelConfig, tokens: jnp.ndarray,
                 site = xs_l["site"]
                 a, new = attention_decode(
                     sp["attn"], cfg, rmsnorm(sp["norm1"], x, cfg.norm_eps),
-                    _index_tree(sc, site))
+                    _index_tree(sc, site), live=live_rows)
                 sc = _tmap(lambda full, n: full.at[site].set(n), sc, new)
                 x = x + a
                 x = x + mlp(sp["mlp"], cfg,
@@ -698,7 +709,7 @@ def decode_step(params, cfg: ModelConfig, tokens: jnp.ndarray,
         if kind in ("attn_dense", "attn_moe"):
             a, cache = attention_decode(
                 lp["attn"], cfg, rmsnorm(lp["norm1"], x, cfg.norm_eps),
-                cache)
+                cache, live=live_rows)
             x = x + a
             h = rmsnorm(lp["norm2"], x, cfg.norm_eps)
             if kind == "attn_dense":
@@ -720,7 +731,8 @@ def decode_step(params, cfg: ModelConfig, tokens: jnp.ndarray,
                     critical = select_critical_rows(imp, xs_l["t_l"])
                     y, rstats = moe_apply_rows(
                         lp["moe"], cfg, hflat, critical,
-                        qweights=xs_l["q"]["moe"])
+                        qweights=xs_l["q"]["moe"], live=live_rows,
+                        capacity=moe_capacity)
                     active = rstats["active"]
                     gate_mean = rstats["gate_mean"]
                 elif per_row_moe:
@@ -898,6 +910,7 @@ def decode_many_batched(params, cfg: ModelConfig, tokens: jnp.ndarray,
                         limits: jnp.ndarray, eos_tokens: jnp.ndarray,
                         qparams: Optional[dict] = None,
                         rng_keys=None, temperatures=None, top_ks=None,
+                        live_cap: Optional[int] = None,
                         ) -> Tuple[jnp.ndarray, Any, DyMoEInfo,
                                    jnp.ndarray, jnp.ndarray]:
     """Fused multi-step decode over a slot batch with a per-row
@@ -926,6 +939,16 @@ def decode_many_batched(params, cfg: ModelConfig, tokens: jnp.ndarray,
     placement and admission order. Rows with ``temperature <= 0`` take
     the same greedy argmax as the no-sampling trace.
 
+    The live-row mask (``~done``) is threaded INTO ``decode_step``: dead
+    rows take no MoE capacity slots (the fused expert kernel's ragged
+    grid skips their FLOPs and weight I/O entirely) and their KV writes
+    freeze at the cache-write site, so the chunk-boundary freeze below
+    is a no-op for KV caches and only still matters for SSM state.
+    ``live_cap`` (STATIC, jit axis) optionally caps each MoE precision
+    region at that many rows instead of B — the scheduler passes a
+    power-of-two ≥ the chunk's live-slot count so mostly-drained batches
+    shrink the expert buffers too (bounded retraces: log2(B) values).
+
     tokens/done/n_emitted/limits/eos_tokens: (B,). Returns (tokens
     (num_steps, B), caches, stacked DyMoEInfo with leaves (num_steps, L,
     B, E), done (B,), n_emitted (B,)).
@@ -937,15 +960,16 @@ def decode_many_batched(params, cfg: ModelConfig, tokens: jnp.ndarray,
 
     def body(carry, _):
         tok, caches, dn, emitted = carry
+        live = ~dn
         logits, new_caches, info = decode_step(
-            params, cfg, tok, caches, qparams=qparams, per_row_moe=True)
+            params, cfg, tok, caches, qparams=qparams, per_row_moe=True,
+            live_rows=live, moe_capacity=live_cap)
         if rng_keys is None:
             nxt = jnp.argmax(logits, axis=-1).astype(jnp.int32)
         else:
             keys = jax.vmap(jax.random.fold_in)(rng_keys, emitted)
             nxt = sample_token_rows(logits, keys, temperatures, top_ks)
         nxt = jnp.where(dn, tok, nxt)
-        live = ~dn
 
         def freeze(new, old):  # finished rows' caches must not advance
             mask = live.reshape((1, -1) + (1,) * (new.ndim - 2))

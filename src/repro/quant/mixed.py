@@ -50,6 +50,8 @@ def mixed_precision_matmul(x: jnp.ndarray, mp: MixedPrecisionWeights,
                            materialize: bool = False,
                            impl: Optional[str] = None,
                            interpret: bool = False,
+                           block_m: int = 128, block_n: int = 128,
+                           block_k: int = 512,
                            out_dtype=None) -> jnp.ndarray:
     """``y = x @ W`` at the precision ``critical`` selects, from packed codes.
 
@@ -78,9 +80,11 @@ def mixed_precision_matmul(x: jnp.ndarray, mp: MixedPrecisionWeights,
         critical = jnp.ones((1,), jnp.int32) if not batched else \
             jnp.ones((mp.high.packed.shape[0],), jnp.int32)
 
+    blocks = dict(block_m=block_m, block_n=block_n, block_k=block_k)
     if batched:
         return expert_quant_matmul(x, mp, critical, impl=impl,
-                                   interpret=interpret, out_dtype=out_dtype)
+                                   interpret=interpret, out_dtype=out_dtype,
+                                   **blocks)
     lead = x.shape[:-1]
     k = x.shape[-1]
     x3 = x.reshape(1, -1, k)
@@ -89,7 +93,7 @@ def mixed_precision_matmul(x: jnp.ndarray, mp: MixedPrecisionWeights,
         high=_lift(mp.high),
         low=_lift(mp.low) if mp.low is not None else None)
     y = expert_quant_matmul(x3, mp1, crit, impl=impl, interpret=interpret,
-                            out_dtype=out_dtype)
+                            out_dtype=out_dtype, **blocks)
     return y.reshape(*lead, -1)
 
 

@@ -246,10 +246,11 @@ class DyMoEEngine:
             partial(decode_many, cfg=cfg),
             static_argnames=("num_steps", "top_k"))
         # slot-batched decode with per-row done-masks (the continuous-
-        # batching scheduler's device half)
+        # batching scheduler's device half); live_cap sizes the fused
+        # MoE kernel's capacity regions to the chunk's live-slot count
         self._decode_batched = jax.jit(
             partial(decode_many_batched, cfg=cfg),
-            static_argnames=("num_steps",))
+            static_argnames=("num_steps", "live_cap"))
         self._orch: Optional[DynamicExpertOrchestrator] = None
         self._session = None   # engine-owned step-driven serving session
 

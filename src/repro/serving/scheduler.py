@@ -783,6 +783,12 @@ class ContinuousBatchingScheduler:
                     if not self._done[r] and not deferred[r]]
             if not live:
                 return   # everything deferred/failed; retry next step
+            # Fused-MoE capacity cap: size each precision region to the
+            # chunk's live-slot count, rounded up to a power of two so at
+            # most log2(B) traces ever exist. Finished slots already cost
+            # zero FLOPs via the ragged grid; this shrinks the scatter
+            # buffers too when the batch is mostly drained.
+            live_cap = min(self._b, 1 << max(0, (len(live) - 1)).bit_length())
             try:
                 self._faults.fire("device.dispatch", chunk=self._n_chunks,
                                   num_steps=chunk, rows=len(live))
@@ -794,7 +800,8 @@ class ContinuousBatchingScheduler:
                         n_emitted=jnp.asarray(self._emitted),
                         limits=jnp.asarray(self._limits),
                         eos_tokens=jnp.asarray(self._eos),
-                        qparams=engine.qparams, **sample_kw)
+                        qparams=engine.qparams, live_cap=live_cap,
+                        **sample_kw)
                 # the boundary sync: ONLY the small (B,) masks cross —
                 # the (T, L, B, E) telemetry stays behind for the worker
                 done_h, emitted_h = jax.device_get((done_d, emitted_d))

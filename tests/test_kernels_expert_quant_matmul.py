@@ -166,6 +166,100 @@ def test_no_dense_expert_weight_intermediate(low_bits):
     assert not bad, f"dense dequantized expert weights materialized: {bad}"
 
 
+def _count_pallas(jaxpr):
+    """Number of pallas_call eqns, recursing into sub-jaxprs. A scan body
+    counts once — which is the point: it IS one dispatch per step."""
+    n = 0
+
+    def walk(jx):
+        nonlocal n
+        for eqn in jx.eqns:
+            if eqn.primitive.name == "pallas_call":
+                n += 1
+            for v in eqn.params.values():
+                for sub in _subjaxprs(v):
+                    walk(sub)
+    walk(jaxpr)
+    return n
+
+
+def _rows_cfg(low_bits=2):
+    return ModelConfig(
+        name="s", arch_type="moe", num_layers=1, d_model=32, vocab_size=64,
+        num_heads=2, num_kv_heads=2, head_dim=16, num_experts=4,
+        num_experts_per_tok=2, moe_d_ff=48, capacity_factor=2.0,
+        dtype="float32", remat="none",
+        dymoe=DyMoEPolicy(low_bits=low_bits, group_size=16))
+
+
+@pytest.mark.parametrize("low_bits", [2, 0])
+def test_fused_rows_single_dispatch_per_matmul(low_bits, monkeypatch):
+    """The tentpole's structural contract: the fused row-local MoE forward
+    launches ONE grouped expert kernel per expert matmul (gate/up/down =
+    3 per layer) — the dual-dispatch path launched 6 (2 precision buffers
+    x 3 matmuls). "4/0" runs the same 3 single-region launches."""
+    from repro.kernels.quant_matmul import ops
+    from repro.models.layers.moe import moe_apply_rows
+    monkeypatch.setattr(ops, "_on_tpu", lambda: True)
+
+    cfg = _rows_cfg(low_bits)
+    p = init_moe(cfg, jax.random.PRNGKey(0), jnp.float32)
+    qw = quantize_moe(p, cfg)
+    b = 8
+    x = jax.random.normal(jax.random.PRNGKey(1), (b, cfg.d_model),
+                          jnp.float32)
+    crit = jax.random.bernoulli(jax.random.PRNGKey(2),
+                                0.5, (b, cfg.num_experts))
+
+    def run(fused):
+        return jax.make_jaxpr(
+            lambda xi: moe_apply_rows(p, cfg, xi, crit, qweights=qw,
+                                      fused=fused)[0])(x)
+
+    assert _count_pallas(run(True).jaxpr) == 3
+    dual = 3 if low_bits == 0 else 6
+    assert _count_pallas(run(False).jaxpr) == dual
+
+
+def test_decode_step_fused_dispatch_and_no_dense_weight(monkeypatch):
+    """Decode-path extension of the structural gate: one fused grouped
+    kernel call per expert matmul in the traced per-row decode step (the
+    layer scan body traces once), and no dense dequantized (E, dm, dff)
+    weight anywhere in the jaxpr."""
+    from repro.kernels.quant_matmul import ops
+    from repro.models import (decode_step, init_params, prefill,
+                              quantize_model)
+
+    cfg = ModelConfig(
+        name="t", arch_type="moe", num_layers=2, d_model=32, vocab_size=64,
+        num_heads=2, num_kv_heads=2, head_dim=16, num_experts=4,
+        num_experts_per_tok=2, moe_d_ff=48, capacity_factor=2.0,
+        dtype="float32", remat="none",
+        dymoe=DyMoEPolicy(low_bits=2, group_size=16))
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    qp = quantize_model(params, cfg)
+    prompt = jnp.ones((2, 4), jnp.int32)
+    logits, caches, _ = prefill(params, cfg, prompt, qparams=qp,
+                                cache_slots=8)
+    tok0 = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+
+    # patch AFTER prefill ran (tracing never lowers, so the pallas path
+    # is safe to trace on CPU; running it is not)
+    monkeypatch.setattr(ops, "_on_tpu", lambda: True)
+    jaxpr = jax.make_jaxpr(
+        lambda t, c: decode_step(params, cfg, t, c, qparams=qp,
+                                 per_row_moe=True)[0])(tok0, caches)
+    assert _count_pallas(jaxpr.jaxpr) == 3
+
+    e, dm, dff = cfg.num_experts, cfg.d_model, cfg.expert_d_ff
+    forbidden = {(e, dm, dff), (e, dff, dm)}
+    floats = {jnp.float32.dtype, jnp.bfloat16.dtype, jnp.float16.dtype}
+    bad = [a for a in _intermediate_avals(jaxpr.jaxpr)
+           if getattr(a, "shape", None) in forbidden
+           and getattr(a, "dtype", None) in floats]
+    assert not bad, f"dense dequantized expert weights materialized: {bad}"
+
+
 def test_unquantized_path_unchanged():
     """Without a critical mask the full-precision einsum path still runs
     (training) — sanity that the rewire didn't touch it."""
