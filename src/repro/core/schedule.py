@@ -50,5 +50,9 @@ def critical_counts(num_layers: int, num_experts: int, lam: float,
 
 def retention_profile(num_layers: int, lam: float, kind: str = "cosine"
                       ) -> np.ndarray:
+    # HOST-SIDE f64 (np, not jnp) — consumed by the orchestrator's cost
+    # model and never traced; ``critical_counts`` above is what reaches
+    # jitted code, already reduced to static Python ints at trace time.
+    # Allowlisted under the dtype-discipline rule (repro.analysis).
     return np.array([retention_ratio(l, num_layers, lam, kind)
                      for l in range(num_layers)], np.float64)

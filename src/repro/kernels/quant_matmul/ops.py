@@ -13,8 +13,9 @@ matmul straight from the packed codes of the precision the mask selects.
 """
 from __future__ import annotations
 
+import contextlib
 import functools
-from typing import Optional
+from typing import Iterator, Optional
 
 import jax
 import jax.numpy as jnp
@@ -28,7 +29,8 @@ from repro.kernels.quant_matmul.ref import expert_quant_matmul_fixed_ref, \
 from repro.quant.qtensor import MixedPrecisionWeights, QuantizedTensor
 
 __all__ = ["quant_matmul", "expert_quant_matmul",
-           "expert_quant_matmul_fixed", "expert_quant_matmul_grouped"]
+           "expert_quant_matmul_fixed", "expert_quant_matmul_grouped",
+           "force_impl"]
 
 
 def _on_tpu() -> bool:
@@ -36,6 +38,35 @@ def _on_tpu() -> bool:
         return jax.default_backend() == "tpu"
     except RuntimeError:  # pragma: no cover
         return False
+
+
+_FORCED_IMPL: Optional[str] = None
+
+
+@contextlib.contextmanager
+def force_impl(impl: Optional[str]) -> Iterator[None]:
+    """Override auto impl selection (``impl=None`` call sites) in scope.
+
+    ``force_impl("pallas")`` makes the jaxpr linter and the structural
+    tests TRACE the Pallas serving path on any backend — tracing never
+    lowers, so no TPU is needed to inspect the kernel dispatch structure.
+    Explicit ``impl=`` arguments still win.
+    """
+    global _FORCED_IMPL
+    prev = _FORCED_IMPL
+    _FORCED_IMPL = impl
+    try:
+        yield
+    finally:
+        _FORCED_IMPL = prev
+
+
+def _resolve_impl(impl: Optional[str]) -> str:
+    if impl is not None:
+        return impl
+    if _FORCED_IMPL is not None:
+        return _FORCED_IMPL
+    return "pallas" if _on_tpu() else "ref"
 
 
 def quant_matmul(x: jnp.ndarray, qt: QuantizedTensor, *,
@@ -46,8 +77,7 @@ def quant_matmul(x: jnp.ndarray, qt: QuantizedTensor, *,
 
     impl: "pallas" | "ref" | None (auto: pallas on TPU, ref elsewhere).
     """
-    if impl is None:
-        impl = "pallas" if _on_tpu() else "ref"
+    impl = _resolve_impl(impl)
     lead = x.shape[:-1]
     k = x.shape[-1]
     x2 = x.reshape(-1, k)
@@ -76,8 +106,7 @@ def expert_quant_matmul_fixed(x: jnp.ndarray, qt: QuantizedTensor, *,
     (the mask costs nothing in-kernel); on CPU it is the branch-free
     unrolled streaming oracle. ``block_m/n/k`` size the Pallas tiles
     (edge configs override via :class:`DyMoEPolicy`)."""
-    if impl is None:
-        impl = "pallas" if _on_tpu() else "ref"
+    impl = _resolve_impl(impl)
     if impl == "pallas":
         e = qt.packed.shape[0]
         return expert_quant_matmul_pallas(
@@ -177,8 +206,7 @@ def expert_quant_matmul_grouped(x: jnp.ndarray,
     dispatch, so their dot is exact zero and the oracle's output is
     bitwise the watermark-pruned kernel's. Returns (E, M, N).
     """
-    if impl is None:
-        impl = "pallas" if _on_tpu() else "ref"
+    impl = _resolve_impl(impl)
     hi, lo = weights.high, weights.low
     lo_bits = lo.bits if lo is not None else 0
     if lo is not None:
@@ -295,8 +323,7 @@ def expert_quant_matmul(x: jnp.ndarray, weights: MixedPrecisionWeights,
     Returns:
       (E, M, N) in ``out_dtype``.
     """
-    if impl is None:
-        impl = "pallas" if _on_tpu() else "ref"
+    impl = _resolve_impl(impl)
     hi, lo = weights.high, weights.low
     lo_bits = lo.bits if lo is not None else 0
     if lo is not None:

@@ -1,0 +1,14 @@
+"""Launch alias for the jaxpr invariant linter.
+
+``python -m repro.launch.lint`` ≡ ``python -m repro.analysis`` — kept so
+the launch/ namespace lists every operational entry point (train, serve,
+dryrun, lint). See :mod:`repro.analysis` for the invariant contract and
+the rule catalog.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.lint [--smoke] [--json report.json]
+"""
+from repro.analysis.lint import main
+
+if __name__ == "__main__":
+    raise SystemExit(main())

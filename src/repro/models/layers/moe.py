@@ -90,6 +90,12 @@ def quantize_moe(p, cfg: ModelConfig) -> dict:
 
 
 def _capacity(cfg: ModelConfig, t: int) -> int:
+    # HOST-SIDE f64, deliberately: Python-float arithmetic so the
+    # truncation is exact and identical wherever this is computed (the
+    # scheduler's admission path depends on bit-matching it; an in-graph
+    # f32 version can differ by one slot — see moe_apply_prefill_rows).
+    # The dtype-discipline linter rule forbids f64 in TRACED serving code;
+    # host-side capacity math like this is exactly the allowlisted form.
     c = int(cfg.capacity_factor * t * cfg.num_experts_per_tok
             / cfg.num_experts)
     # An expert can receive at most one capacity slot per token, so c > t

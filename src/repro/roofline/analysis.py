@@ -31,6 +31,10 @@ class HW:
     ici_bw: float = 50e9         # B/s per link
 
 
+# Byte widths for parsing HLO text on the HOST — the f64/s64 entries
+# describe dtypes an HLO dump may mention, they do not put f64 into any
+# traced program (the dtype-discipline rule in repro.analysis checks
+# that none of the serving jaxprs carry f64 avals).
 _DTYPE_BYTES = {
     "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
     "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8,

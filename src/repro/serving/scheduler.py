@@ -132,7 +132,21 @@ from repro.serving.request import Request, RequestHandle, TokenChunk
 from repro.serving.sampler import raw_key_data, resolve_sampling, \
     sample_token_rows
 
-__all__ = ["SchedulerConfig", "ContinuousBatchingScheduler"]
+__all__ = ["SchedulerConfig", "ContinuousBatchingScheduler",
+           "live_cap_for"]
+
+
+def live_cap_for(n_live: int, slots: int) -> int:
+    """The static-capacity ladder: the ``live_cap`` jit axis for a chunk
+    with ``n_live`` live rows out of ``slots`` device slots.
+
+    Power of two ≥ ``n_live``, clamped to ``slots`` — so across every
+    reachable live count a session compiles at most ``log2(slots) + 1``
+    decode variants per sampling mode. The retrace-budget rule in
+    :mod:`repro.analysis` checks THIS function; changing the ladder here
+    is what the linter re-verifies.
+    """
+    return min(slots, 1 << max(0, n_live - 1).bit_length())
 
 # what counts as a recoverable device/allocation failure in the dispatch
 # and admission ladders: injected faults, XLA runtime errors (RuntimeError
@@ -788,7 +802,7 @@ class ContinuousBatchingScheduler:
             # most log2(B) traces ever exist. Finished slots already cost
             # zero FLOPs via the ragged grid; this shrinks the scatter
             # buffers too when the batch is mostly drained.
-            live_cap = min(self._b, 1 << max(0, (len(live) - 1)).bit_length())
+            live_cap = live_cap_for(len(live), self._b)
             try:
                 self._faults.fire("device.dispatch", chunk=self._n_chunks,
                                   num_steps=chunk, rows=len(live))

@@ -15,12 +15,14 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
+from repro.analysis.rules import LintTarget, run_rules
 from repro.kernels.quant_matmul.ops import (expert_quant_matmul_fixed,
                                             expert_quant_matmul_grouped)
 from repro.models.config import DyMoEPolicy, ModelConfig
 from repro.models.layers.moe import (init_moe, moe_apply_prefill_rows,
                                      moe_apply_rows, quantize_moe)
 from repro.quant import MixedPrecisionWeights
+from repro.serving.scheduler import live_cap_for
 
 E, K, N = 4, 64, 32
 GROUP = 32
@@ -156,7 +158,7 @@ def test_rows_live_raggedness(dead_frac):
         live[np.random.default_rng(8).choice(b, n_dead, replace=False)] = 0
     live_j = jnp.asarray(live)
     n_live = max(1, int(live.sum()))
-    cap = 1 << (n_live - 1).bit_length()
+    cap = live_cap_for(n_live, b)     # the scheduler's actual ladder
 
     yf, _ = moe_apply_rows(p, cfg, x, crit, qweights=qw, live=live_j,
                            capacity=cap, fused=True)
@@ -172,16 +174,26 @@ def test_rows_live_raggedness(dead_frac):
 
 def test_rows_capacity_values_bounded_retrace_grid():
     """Every power-of-two capacity the scheduler can pick yields the same
-    live-row values — the shrink is invisible to tokens."""
+    live-row values — the shrink is invisible to tokens. The ladder
+    itself is the shared ``live_cap_for`` and must satisfy the linter's
+    retrace-budget rule (pow2 caps, ≤ log2(B)+1 distinct)."""
     b = 8
     cfg, p, qw, x, crit = _layer(2, b=b, seed=9)
     live = jnp.asarray([True, True, True, False, False, False, False, False])
+    caps = sorted({live_cap_for(n, b) for n in range(3, b + 1)})
+    assert caps == [4, 8]               # pow2 ladder >= live count (3)
     outs = []
-    for cap in (4, 8):                  # pow2 ladder >= live count (3)
+    for cap in caps:
         y, _ = moe_apply_rows(p, cfg, x, crit, qweights=qw, live=live,
                               capacity=cap, fused=True)
         outs.append(np.asarray(y))
     np.testing.assert_array_equal(outs[0], outs[1])
+
+    findings = run_rules(
+        LintTarget(name="test/scheduler/retrace", cfg=cfg, phase="retrace",
+                   slots=b, ladder=live_cap_for),
+        only=["retrace-budget"])
+    assert not findings, findings
 
 
 @pytest.mark.parametrize("low_bits", [2, 0])

@@ -7,7 +7,9 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.kernels.quant_matmul.ops import expert_quant_matmul
+from repro.analysis import count_pallas_calls, intermediate_avals
+from repro.analysis.rules import FLOAT_DTYPES
+from repro.kernels.quant_matmul.ops import expert_quant_matmul, force_impl
 from repro.models.config import DyMoEPolicy, ModelConfig
 from repro.models.layers.moe import init_moe, moe_apply, quantize_moe
 from repro.quant import MixedPrecisionWeights, mixed_precision_matmul
@@ -106,34 +108,8 @@ def test_vmaps_for_sharded_dispatch():
 
 
 # ------------------------------------------------ structural guarantee
-
-
-def _intermediate_avals(jaxpr):
-    """All eqn output avals, recursing into sub-jaxprs (scan/cond/map)."""
-    seen = []
-
-    def walk(jx):
-        for eqn in jx.eqns:
-            seen.extend(v.aval for v in eqn.outvars)
-            for v in eqn.params.values():
-                for sub in _subjaxprs(v):
-                    walk(sub)
-    walk(jaxpr)
-    return seen
-
-
-def _subjaxprs(v):
-    core = jax.core
-    if isinstance(v, core.ClosedJaxpr):
-        return [v.jaxpr]
-    if isinstance(v, core.Jaxpr):
-        return [v]
-    if isinstance(v, (list, tuple)):
-        out = []
-        for item in v:
-            out.extend(_subjaxprs(item))
-        return out
-    return []
+# The jaxpr traversal lives in repro.analysis (walker.py) — these tests
+# and the invariant linter share it, so the gates can never drift apart.
 
 
 @pytest.mark.parametrize("low_bits", [2, 0])
@@ -159,28 +135,10 @@ def test_no_dense_expert_weight_intermediate(low_bits):
                              qweights=qw)[0])(x)
     e, dm, dff = cfg.num_experts, cfg.d_model, cfg.expert_d_ff
     forbidden = {(e, dm, dff), (e, dff, dm)}
-    floats = {jnp.float32.dtype, jnp.bfloat16.dtype, jnp.float16.dtype}
-    bad = [a for a in _intermediate_avals(jaxpr.jaxpr)
+    bad = [a for a in intermediate_avals(jaxpr)
            if getattr(a, "shape", None) in forbidden
-           and getattr(a, "dtype", None) in floats]
+           and getattr(a, "dtype", None) in FLOAT_DTYPES]
     assert not bad, f"dense dequantized expert weights materialized: {bad}"
-
-
-def _count_pallas(jaxpr):
-    """Number of pallas_call eqns, recursing into sub-jaxprs. A scan body
-    counts once — which is the point: it IS one dispatch per step."""
-    n = 0
-
-    def walk(jx):
-        nonlocal n
-        for eqn in jx.eqns:
-            if eqn.primitive.name == "pallas_call":
-                n += 1
-            for v in eqn.params.values():
-                for sub in _subjaxprs(v):
-                    walk(sub)
-    walk(jaxpr)
-    return n
 
 
 def _rows_cfg(low_bits=2):
@@ -193,14 +151,12 @@ def _rows_cfg(low_bits=2):
 
 
 @pytest.mark.parametrize("low_bits", [2, 0])
-def test_fused_rows_single_dispatch_per_matmul(low_bits, monkeypatch):
+def test_fused_rows_single_dispatch_per_matmul(low_bits):
     """The tentpole's structural contract: the fused row-local MoE forward
     launches ONE grouped expert kernel per expert matmul (gate/up/down =
     3 per layer) — the dual-dispatch path launched 6 (2 precision buffers
     x 3 matmuls). "4/0" runs the same 3 single-region launches."""
-    from repro.kernels.quant_matmul import ops
     from repro.models.layers.moe import moe_apply_rows
-    monkeypatch.setattr(ops, "_on_tpu", lambda: True)
 
     cfg = _rows_cfg(low_bits)
     p = init_moe(cfg, jax.random.PRNGKey(0), jnp.float32)
@@ -212,21 +168,21 @@ def test_fused_rows_single_dispatch_per_matmul(low_bits, monkeypatch):
                                 0.5, (b, cfg.num_experts))
 
     def run(fused):
-        return jax.make_jaxpr(
-            lambda xi: moe_apply_rows(p, cfg, xi, crit, qweights=qw,
-                                      fused=fused)[0])(x)
+        with force_impl("pallas"):
+            return jax.make_jaxpr(
+                lambda xi: moe_apply_rows(p, cfg, xi, crit, qweights=qw,
+                                          fused=fused)[0])(x)
 
-    assert _count_pallas(run(True).jaxpr) == 3
+    assert count_pallas_calls(run(True)) == 3
     dual = 3 if low_bits == 0 else 6
-    assert _count_pallas(run(False).jaxpr) == dual
+    assert count_pallas_calls(run(False)) == dual
 
 
-def test_decode_step_fused_dispatch_and_no_dense_weight(monkeypatch):
+def test_decode_step_fused_dispatch_and_no_dense_weight():
     """Decode-path extension of the structural gate: one fused grouped
     kernel call per expert matmul in the traced per-row decode step (the
     layer scan body traces once), and no dense dequantized (E, dm, dff)
     weight anywhere in the jaxpr."""
-    from repro.kernels.quant_matmul import ops
     from repro.models import (decode_step, init_params, prefill,
                               quantize_model)
 
@@ -243,20 +199,19 @@ def test_decode_step_fused_dispatch_and_no_dense_weight(monkeypatch):
                                 cache_slots=8)
     tok0 = jnp.argmax(logits, axis=-1).astype(jnp.int32)
 
-    # patch AFTER prefill ran (tracing never lowers, so the pallas path
-    # is safe to trace on CPU; running it is not)
-    monkeypatch.setattr(ops, "_on_tpu", lambda: True)
-    jaxpr = jax.make_jaxpr(
-        lambda t, c: decode_step(params, cfg, t, c, qparams=qp,
-                                 per_row_moe=True)[0])(tok0, caches)
-    assert _count_pallas(jaxpr.jaxpr) == 3
+    # force Pallas AFTER prefill ran (tracing never lowers, so the pallas
+    # path is safe to trace on CPU; running it is not)
+    with force_impl("pallas"):
+        jaxpr = jax.make_jaxpr(
+            lambda t, c: decode_step(params, cfg, t, c, qparams=qp,
+                                     per_row_moe=True)[0])(tok0, caches)
+    assert count_pallas_calls(jaxpr) == 3
 
     e, dm, dff = cfg.num_experts, cfg.d_model, cfg.expert_d_ff
     forbidden = {(e, dm, dff), (e, dff, dm)}
-    floats = {jnp.float32.dtype, jnp.bfloat16.dtype, jnp.float16.dtype}
-    bad = [a for a in _intermediate_avals(jaxpr.jaxpr)
+    bad = [a for a in intermediate_avals(jaxpr)
            if getattr(a, "shape", None) in forbidden
-           and getattr(a, "dtype", None) in floats]
+           and getattr(a, "dtype", None) in FLOAT_DTYPES]
     assert not bad, f"dense dequantized expert weights materialized: {bad}"
 
 
