@@ -48,8 +48,8 @@ import numpy as np
 
 from repro.core.cache import MixedPrecisionLRUCache
 
-__all__ = ["OrchestratorConfig", "LayerTiming", "StepTiming",
-           "DynamicExpertOrchestrator"]
+__all__ = ["OrchestratorConfig", "DegradeOverride", "LayerTiming",
+           "StepTiming", "DynamicExpertOrchestrator"]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -66,6 +66,61 @@ class OrchestratorConfig:
     enable_prefetch: bool = True  # ablation row 2 vs 3
     enable_dyquant: bool = True   # False => every expert requested high
     prefetch_topk: int = 2
+
+
+@dataclasses.dataclass(frozen=True)
+class DegradeOverride:
+    """One rung of the SLO pressure ladder, applied HOST-SIDE at replay
+    time (see :mod:`repro.serving.policy`): the device program and its
+    tokens are untouched — only the modeled precision mix, prefetch
+    budget and therefore the modeled latency accounting degrade. That is
+    what keeps the ladder free of jit retraces (the linter's
+    retrace-budget rule never sees it) while still modeling the paper's
+    precision-for-latency trade under overload.
+
+    ``critical_keep``: fraction of each layer's Critical set kept at high
+    precision (the rest demote to sub-critical — low bits, or skipped
+    under ``force_skip``/"x/0"); kept experts are the lowest ids of the
+    set, matching the ascending-id order both replay walks visit.
+    ``prefetch_topk``: override of ``OrchestratorConfig.prefetch_topk``
+    (0 disables look-ahead prefetch). ``force_skip``: sub-critical
+    experts are dropped from the active set outright — the "4/0" rung.
+    """
+
+    critical_keep: float = 1.0
+    prefetch_topk: Optional[int] = None
+    force_skip: bool = False
+
+    def __post_init__(self):
+        if not (0.0 < self.critical_keep <= 1.0):
+            raise ValueError(
+                f"critical_keep must be in (0, 1], got {self.critical_keep}")
+        if self.prefetch_topk is not None and self.prefetch_topk < 0:
+            raise ValueError(
+                f"prefetch_topk override must be >= 0, got "
+                f"{self.prefetch_topk}")
+
+    def apply(self, crit: np.ndarray, active: np.ndarray):
+        """Degrade ``(..., E)`` critical/active masks (any batch shape).
+
+        Per trailing slice: keep the first ``ceil(keep * n_crit)`` critical
+        experts (ascending expert id — never below 1 when the slice had
+        any), demote the rest; under ``force_skip`` demoted-and-sub-critical
+        experts leave the active set entirely. Returns new arrays; the
+        inputs are not mutated.
+        """
+        crit = np.asarray(crit, bool)
+        active = np.asarray(active, bool)
+        out_crit = crit
+        if self.critical_keep < 1.0:
+            n_crit = crit.sum(axis=-1, keepdims=True)
+            n_keep = np.ceil(self.critical_keep * n_crit).astype(n_crit.dtype)
+            n_keep = np.maximum(n_keep, np.minimum(n_crit, 1))
+            rank = np.cumsum(crit, axis=-1)        # 1-based among critical
+            out_crit = crit & (rank <= n_keep)
+        if self.force_skip:
+            return out_crit, active & out_crit
+        return out_crit, active
 
 
 @dataclasses.dataclass
@@ -115,6 +170,10 @@ class DynamicExpertOrchestrator:
         self.cache = MixedPrecisionLRUCache(capacity, faults=faults)
         self._dma_tail = 0.0
         self._now = 0.0
+        # current SLO-pressure rung override (None = full quality); set
+        # by the serving policy layer at chunk boundaries, read by the
+        # replay path — both on the replay timeline, so no lock needed
+        self.degrade: Optional[DegradeOverride] = None
         # (layer, expert) -> modeled DMA completion time of an issued
         # prefetch whose arrival has not yet been observed by a demand
         # request (the fix for write-only _dma_tail / instant admission)
@@ -134,6 +193,18 @@ class DynamicExpertOrchestrator:
 
     def _exit_replay(self) -> None:
         self._replay_lock.release()
+
+    def set_degrade(self, override: Optional[DegradeOverride]) -> None:
+        """Install (or clear, with None) the pressure ladder's current
+        rung. Takes effect from the next replayed step; callers sequence
+        this with replays (the serving scheduler sets it at chunk
+        boundaries, which are ordered against the FIFO replay stream)."""
+        self.degrade = override
+
+    def _prefetch_topk(self) -> int:
+        if self.degrade is not None and self.degrade.prefetch_topk is not None:
+            return self.degrade.prefetch_topk
+        return self.cfg.prefetch_topk
 
     def _bytes(self, precision: str) -> int:
         return (self.cfg.bytes_high if precision == "high"
@@ -234,7 +305,7 @@ class DynamicExpertOrchestrator:
         topk phantom prefetches out of ties at 0)."""
         cfg = self.cfg
         pred_l = np.asarray(pred_l)
-        top = np.argsort(-pred_l)[:cfg.prefetch_topk]
+        top = np.argsort(-pred_l)[:self._prefetch_topk()]
         pf_bytes = 0
         tail = max(self._dma_tail, compute_start)
         for e in top:
@@ -277,8 +348,11 @@ class DynamicExpertOrchestrator:
         cfg = self.cfg
         timings: List[LayerTiming] = []
         for l in range(cfg.num_layers):
-            reqs = self._required_precisions(
-                np.asarray(critical_masks[l]), np.asarray(active_masks[l]))
+            crit_l = np.asarray(critical_masks[l])
+            act_l = np.asarray(active_masks[l])
+            if self.degrade is not None:   # pressure ladder (host-side)
+                crit_l, act_l = self.degrade.apply(crit_l, act_l)
+            reqs = self._required_precisions(crit_l, act_l)
             missed = 0
             n_hi = n_lo = n_skip = 0
             per_key = []
@@ -354,6 +428,8 @@ class DynamicExpertOrchestrator:
         active = np.asarray(active_masks, bool)
         assert crit.ndim == 3 and active.shape == crit.shape, (
             crit.shape, np.shape(active))
+        if self.degrade is not None:   # pressure ladder (host-side)
+            crit, active = self.degrade.apply(crit, active)
         pred = (None if predicted_next is None
                 else np.asarray(predicted_next, float))
         compute = np.asarray(compute_s, float)

@@ -19,6 +19,18 @@ request a wall-clock deadline (queued requests past it are shed with
 ``DeadlineExceeded``; in-flight ones are evicted with a partial result).
 Ctrl-C drains gracefully: in-flight requests finish, queued ones are
 cancelled, results collected — a second Ctrl-C aborts the drain.
+
+SLO overload control (``--policy edf``): admission is ordered by
+(priority desc, earliest deadline); ``--priority N`` marks the mid-run
+burst as an urgent tier that admits first and PREEMPTS busy lower-tier
+slots at a chunk boundary (preempted requests resume bit-identical);
+queue pressure walks the precision degradation ladder (watch
+``pressure_rung`` / ``rung_transitions`` / ``preemptions`` in the
+reported health). ``--policy fifo`` (default) is the bit-exact
+pre-policy path. Overload demo:
+
+  PYTHONPATH=src python -m repro.launch.serve --requests 8 \
+      --num-slots 2 --policy edf --priority 2 --deadline-s 30
 """
 from __future__ import annotations
 
@@ -64,6 +76,16 @@ def main() -> None:
                     help="per-request wall-clock deadline: queued past it "
                          "-> shed (DeadlineExceeded); in flight past it "
                          "-> evicted with a partial result")
+    ap.add_argument("--policy", choices=["fifo", "edf"], default="fifo",
+                    help="scheduling policy: fifo (default, bit-exact "
+                         "pre-policy path) or edf (priority + earliest-"
+                         "deadline admission, infeasibility shedding, "
+                         "chunk-boundary preemption, pressure-adaptive "
+                         "precision degradation)")
+    ap.add_argument("--priority", type=int, default=0,
+                    help="priority tier for the MID-RUN burst half of the "
+                         "open loop (higher admits first and may preempt "
+                         "under --policy edf; ignored under fifo)")
     ap.add_argument("--reduced", action="store_true", default=True)
     ap.add_argument("--full", dest="reduced", action="store_false")
     ap.add_argument("--no-cache", action="store_true")
@@ -88,14 +110,14 @@ def main() -> None:
     sampling = SamplingParams(temperature=args.temperature,
                               top_k=args.top_k, seed=args.seed)
 
-    def request(i: int) -> Request:
+    def request(i: int, priority: int = 0) -> Request:
         # per-request sampling stream: seed offset keeps streams distinct
         sp = (sampling if sampling.seed is None else
               dataclasses.replace(sampling, seed=sampling.seed + i))
         return Request(prompt_tokens=list(range(1 + i, args.prompt_len
                                                 + 1 + i)),
                        max_new_tokens=args.max_new, sampling=sp,
-                       request_id=f"req-{i}",
+                       request_id=f"req-{i}", priority=priority,
                        deadline_s=args.deadline_s)
 
     if args.requests <= 1:
@@ -112,7 +134,8 @@ def main() -> None:
     session = engine.serve(num_slots=args.num_slots,
                            slots_len=args.prompt_len + args.max_new
                            + args.requests,
-                           max_queue=args.max_queue)
+                           max_queue=args.max_queue,
+                           policy=args.policy)
     handles = []
     try:
         n_first = max(1, args.requests // 2)
@@ -121,9 +144,11 @@ def main() -> None:
                                              drive=True))
         for _ in range(2):       # the engine is already decoding...
             engine.step()
-        for i in range(n_first, args.requests):  # ...the burst arrives
-            handles.append(submit_with_retry(session, request(i),
-                                             drive=True))
+        # ...the burst arrives — under --policy edf with --priority > 0
+        # it admits first and may preempt the busy bulk slots
+        for i in range(n_first, args.requests):
+            handles.append(submit_with_retry(
+                session, request(i, priority=args.priority), drive=True))
         print(f"# streaming {handles[-1].request_id} "
               f"(submitted mid-run, admitted into a freed slot):")
         for ev in handles[-1].stream():
@@ -144,17 +169,20 @@ def main() -> None:
         if h.error is not None:
             return dict(id=h.request_id, error=type(h.error).__name__)
         r = h.result()
-        return dict(id=h.request_id, ttft_ms=r.ttft_s * 1e3,
+        return dict(id=h.request_id, priority=h.request.priority,
+                    ttft_ms=r.ttft_s * 1e3,
                     tpot_ms=r.tpot_s * 1e3,
                     queue_wait_ms=(r.queue_wait_s or 0) * 1e3,
                     cancelled=r.cancelled,
                     deadline_expired=r.deadline_expired,
+                    preempted=r.preempted,
                     tokens=r.tokens[:8])
 
     print(json.dumps(dict(
         arch=cfg.name, mode=args.mode, vram_gb=args.vram_gb,
         num_slots=args.num_slots, max_queue=args.max_queue,
-        deadline_s=args.deadline_s, health=dataclasses.asdict(health),
+        deadline_s=args.deadline_s, policy=args.policy,
+        priority=args.priority, health=dataclasses.asdict(health),
         requests=[row(h) for h in handles]), indent=2))
 
 

@@ -5,6 +5,9 @@ from repro.serving.faults import AdmissionError, DeadlineExceeded, \
     DispatchError, FaultInjector, FaultSpec, InjectedFault, NO_FAULTS, \
     QueueFull, ReplayError, ServingError, SessionClosed, SessionHealth, \
     requeue, result_with_retry, submit_with_retry
+from repro.serving.policy import DegradationLadder, EDFPolicy, FIFOPolicy, \
+    SLOPressure, SchedulingPolicy, effective_deadline, \
+    estimate_service_s, make_policy
 from repro.serving.sampler import sample_token, sample_token_rows
 from repro.serving.request import Request, RequestHandle, SamplingParams, \
     TokenChunk
@@ -21,4 +24,9 @@ __all__ = ["EdgeProfile", "EdgeCostModel", "DyMoEEngine", "EngineConfig",
            "AdmissionError", "QueueFull", "DeadlineExceeded",
            "SessionClosed", "InjectedFault", "FaultSpec", "FaultInjector",
            "NO_FAULTS", "SessionHealth", "submit_with_retry", "requeue",
-           "result_with_retry"]
+           "result_with_retry",
+           # SLO policy layer: admission order, shedding, preemption,
+           # pressure degradation ladder
+           "SchedulingPolicy", "FIFOPolicy", "EDFPolicy", "SLOPressure",
+           "DegradationLadder", "make_policy", "estimate_service_s",
+           "effective_deadline"]

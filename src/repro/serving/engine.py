@@ -219,6 +219,11 @@ class GenerationResult:
     # ``deadline_s`` expiring in flight (deadline evictions are a
     # cancellation: partial tokens, real partial accounting)
     deadline_expired: bool = False
+    # times an SLO policy preempted this request at a chunk boundary
+    # before it completed (each preemption re-prefilled it on resume;
+    # tokens are bit-identical, queue_wait/TTFT accounting restarts at
+    # the final admission) — see repro.serving.policy
+    preempted: int = 0
 
 
 class DyMoEEngine:
@@ -324,7 +329,12 @@ class DyMoEEngine:
         crit = np.asarray(crit, bool).reshape(T, cfg.num_layers, -1)
         active = np.asarray(active, bool).reshape(crit.shape)
         pred = np.asarray(pred).reshape(crit.shape)
-        n_hi, n_lo = self._expert_counts(crit, active)    # (T, L)
+        # SLO pressure ladder: price compute/bytes with the SAME degraded
+        # precision mix the orchestrator's cache walk will use (step_batch
+        # applies the identical override to the raw masks it receives)
+        dcrit, dactive = ((crit, active) if orch.degrade is None
+                          else orch.degrade.apply(crit, active))
+        n_hi, n_lo = self._expert_counts(dcrit, dactive)  # (T, L)
         wbytes = int(self.cost.moe_weight_bytes(n_hi, n_lo).sum())
         compute = self.cost.layer_compute_s(
             phase=phase, s_ctx=s_ctx[:, None], s_q=s_q,
@@ -337,7 +347,8 @@ class DyMoEEngine:
     def serve(self, num_slots: Optional[int] = None, *,
               pipeline: Optional[bool] = None,
               slots_len: Optional[int] = None,
-              max_queue: Optional[int] = None):
+              max_queue: Optional[int] = None,
+              policy=None):
         """Open (and remember) a step-driven serving session — the open
         counterpart of ``generate_batch``. Returns the
         :class:`~repro.serving.scheduler.ContinuousBatchingScheduler`
@@ -351,6 +362,12 @@ class DyMoEEngine:
         raises a typed :class:`~repro.serving.faults.QueueFull` instead of
         growing latency without bound (backpressure; None = unbounded).
 
+        ``policy`` selects the SLO scheduling policy
+        (:mod:`repro.serving.policy`): ``"fifo"`` (default — the
+        bit-exactness oracle), ``"edf"`` (priority + deadline-aware
+        admission, infeasibility shedding, chunk-boundary preemption,
+        pressure degradation ladder), or a ``SchedulingPolicy`` instance.
+
         An existing engine-owned session is retired first: its submitted
         replay jobs are flushed, its worker stopped, and any handle still
         queued or in flight on it resolves with a typed
@@ -363,7 +380,7 @@ class DyMoEEngine:
             self._session.close()
         session = ContinuousBatchingScheduler(self, num_slots=num_slots)
         session._ensure_started(slots_len=slots_len, pipeline=pipeline,
-                                max_queue=max_queue)
+                                max_queue=max_queue, policy=policy)
         self._session = session
         return session
 

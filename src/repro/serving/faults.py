@@ -35,6 +35,11 @@ Injection sites (visit counters are PER SITE, starting at 0):
   ``replay.chunk``   decode-chunk telemetry replay job
   ``device.dispatch``decode-chunk dispatch ATTEMPT (retries count)
   ``admit.alloc``    admission-wave prefill dispatch attempt
+  ``preempt.evict``  chunk-boundary preemption attempt (a raise aborts
+                     JUST that preemption — the victim keeps its slot,
+                     the urgent request stays queued; nothing fails)
+  ``degrade.shift``  pressure-ladder rung transition attempt (a raise
+                     skips the shift; the session stays at its rung)
   ``cache.blob.corrupt``  demand load (miss) in the expert cache
   ``cache.blob.oversize`` blob-size lookup in the expert cache (inflate)
   ================== ====================================================
@@ -101,7 +106,17 @@ class QueueFull(ServingError):
 
 class DeadlineExceeded(ServingError):
     """The request's ``deadline_s`` / ``ttft_deadline_s`` expired while it
-    was still queued: it was shed before wasting a prefill wave."""
+    was still queued: it was shed before wasting a prefill wave.
+
+    ``infeasible=True`` marks PROACTIVE shedding by an SLO-aware policy
+    (:mod:`repro.serving.policy`): the deadline had not yet expired on the
+    wall clock, but the optimistic modeled service bound no longer fit the
+    remaining budget — the request provably could not make it, so it was
+    shed at admission instead of burning a slot until expiry."""
+
+    def __init__(self, *args, infeasible: bool = False):
+        super().__init__(*args)
+        self.infeasible = infeasible
 
 
 class SessionClosed(ServingError):
@@ -242,20 +257,42 @@ class SessionHealth:
     queue_rejections: int = 0     # submits rejected with QueueFull
     queue_depth: int = 0          # currently queued requests
     in_flight: int = 0            # currently admitted requests
+    # SLO policy layer (repro.serving.policy; all zero under FIFO):
+    infeasible_shed: int = 0      # proactively shed (modeled bound > SLO)
+    preemptions: int = 0          # in-flight rows evicted for urgent work
+    pressure_rung: int = 0        # current degradation-ladder rung (0=full)
+    rung_transitions: int = 0     # ladder engage/release shifts so far
     last_fault: Optional[str] = None   # repr of the most recent fault
 
 
 # ------------------------------------------------------------ retry tools
 def submit_with_retry(session, request, *, attempts: int = 5,
-                      backoff_s: float = 0.01, rng_key=None,
+                      backoff_s: float = 0.01, jitter: float = 0.5,
+                      max_elapsed_s: Optional[float] = None,
+                      retry_seed: Optional[int] = None, rng_key=None,
                       drive: bool = False,
                       sleep: Callable[[float], None] = time.sleep):
     """``session.submit`` with exponential backoff on :class:`QueueFull`.
+
+    Each backoff is JITTERED: attempt ``i`` sleeps
+    ``backoff_s * 2**i * u`` with ``u`` drawn uniformly from
+    ``[1 - jitter, 1]`` — so a fleet of clients rejected by the same full
+    queue at the same instant spreads out instead of retrying in lockstep
+    against it (``jitter=0`` restores the deterministic schedule;
+    ``retry_seed`` pins the draw for reproducible tests).
+    ``max_elapsed_s`` caps the TOTAL backoff budget: once cumulative
+    sleep would exceed it, the pending :class:`QueueFull` re-raises even
+    with attempts remaining — a client under overload gives up in bounded
+    time instead of stretching its own deadline.
 
     ``drive=True`` advances the session (``session.step()``) between
     attempts instead of only sleeping — use it when the caller IS the
     driving thread, where sleeping would never drain the queue. The last
     attempt re-raises."""
+    if not (0.0 <= jitter <= 1.0):
+        raise ValueError(f"jitter must be in [0, 1], got {jitter}")
+    rng = np.random.default_rng(retry_seed)
+    elapsed = 0.0
     for i in range(attempts):
         try:
             return session.submit(request, rng_key=rng_key)
@@ -264,20 +301,33 @@ def submit_with_retry(session, request, *, attempts: int = 5,
                 raise
             if drive:
                 session.step()
-            else:
-                sleep(backoff_s * (2 ** i))
+                continue
+            delay = backoff_s * (2 ** i)
+            if jitter:
+                delay *= 1.0 - jitter * float(rng.random())
+            if max_elapsed_s is not None and \
+                    elapsed + delay > max_elapsed_s:
+                raise
+            elapsed += delay
+            sleep(delay)
 
 
 def requeue(handle, *, attempts: int = 5, backoff_s: float = 0.01,
-            rng_key=None, drive: bool = False,
+            jitter: float = 0.5, max_elapsed_s: Optional[float] = None,
+            retry_seed: Optional[int] = None, rng_key=None,
+            drive: bool = False,
             sleep: Callable[[float], None] = time.sleep):
     """Cancel-and-requeue: cancel ``handle`` (a no-op if it already
     finished) and resubmit its request on the same session with
     :func:`submit_with_retry` backoff. Returns the NEW handle — the
-    preemption / transient-failure retry primitive."""
+    manual-preemption / transient-failure retry primitive. (Policy-driven
+    chunk-boundary preemption — :mod:`repro.serving.policy` — keeps the
+    SAME handle and requeues it internally instead.)"""
     handle.cancel()
     return submit_with_retry(handle._session, handle.request,
                              attempts=attempts, backoff_s=backoff_s,
+                             jitter=jitter, max_elapsed_s=max_elapsed_s,
+                             retry_seed=retry_seed,
                              rng_key=rng_key, drive=drive, sleep=sleep)
 
 

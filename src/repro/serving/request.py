@@ -62,6 +62,11 @@ class Request:
     eos_token: Optional[int] = None   # stop (inclusive) when sampled
     request_id: Optional[str] = None
     seed: Optional[int] = None        # per-request PRNG stream root
+    # SLO tier: higher admits first under priority-aware policies and may
+    # preempt strictly-lower-priority in-flight rows at a chunk boundary
+    # (repro.serving.policy). 0 — the default — is bulk traffic; the
+    # field is ignored entirely under the FIFO policy.
+    priority: int = 0
     # WALL-CLOCK deadlines, measured from submission. ``deadline_s``: the
     # whole-request budget — expired while queued, the request is shed
     # with a typed ``DeadlineExceeded`` before wasting a prefill wave;
@@ -89,6 +94,11 @@ class Request:
             raise ValueError(
                 f"Request.max_new_tokens must be >= 1, "
                 f"got {self.max_new_tokens}")
+        if not isinstance(self.priority, int) or \
+                isinstance(self.priority, bool):
+            raise ValueError(
+                f"Request.priority must be an int (higher = more "
+                f"important), got {self.priority!r}")
         for name in ("deadline_s", "ttft_deadline_s"):
             v = getattr(self, name)
             if v is not None and (math.isnan(v) or v < 0.0):
@@ -170,6 +180,17 @@ class RequestHandle:
         self.temperature = 0.0
         self.top_k = 0
         self.key = None
+        # tokens already DELIVERED to this handle's stream, maintained by
+        # the replay worker (single writer). After a chunk-boundary
+        # preemption the request re-prefills from scratch on resume —
+        # regenerating bit-identical tokens — and the resumed
+        # incarnation's replay suppresses events up to this watermark, so
+        # the stream never repeats a token and its concatenation still
+        # equals result().tokens exactly.
+        self._streamed = 0
+        # times this request was preempted (policy layer); surfaced on
+        # the final GenerationResult
+        self._preempted = 0
         self._events: _queue.Queue = _queue.Queue()
         self._finished = threading.Event()
         self._ended = False      # this handle's iterator consumed the

@@ -115,7 +115,7 @@ import threading
 import time
 from collections import deque
 from functools import partial
-from typing import Deque, List, Optional, Sequence
+from typing import Deque, List, Optional, Sequence, Union
 
 import jax
 import jax.numpy as jnp
@@ -128,6 +128,8 @@ from repro.models.model import init_decode_state
 from repro.serving.faults import NO_FAULTS, AdmissionError, \
     DeadlineExceeded, DispatchError, InjectedFault, QueueFull, \
     ReplayError, SessionClosed, SessionHealth
+from repro.serving.policy import SchedulingPolicy, SLOPressure, \
+    effective_deadline, make_policy
 from repro.serving.request import Request, RequestHandle, TokenChunk
 from repro.serving.sampler import raw_key_data, resolve_sampling, \
     sample_token_rows
@@ -169,6 +171,12 @@ class SchedulerConfig:
     # admission-queue bound: submits beyond it raise a typed QueueFull
     # (backpressure) instead of growing latency unbounded. None = no bound.
     max_queue: Optional[int] = None
+    # SLO scheduling policy: "fifo" (default — blind FIFO admission, the
+    # bit-exactness oracle), "edf" (priority + earliest-deadline-first
+    # admission, proactive infeasibility shedding, chunk-boundary
+    # preemption, pressure degradation ladder), or a SchedulingPolicy
+    # instance (repro.serving.policy)
+    policy: Union[str, SchedulingPolicy, None] = "fifo"
 
 
 @dataclasses.dataclass
@@ -249,7 +257,45 @@ class ContinuousBatchingScheduler:
         queued requests whose ``deadline_s``/``ttft_deadline_s`` expire
         are shed with :class:`DeadlineExceeded`; in-flight requests whose
         ``deadline_s`` expires are evicted at the next boundary like a
-        cancel (partial result, ``deadline_expired=True``).
+        cancel (partial result, ``deadline_expired=True``). Under a
+        policy with ``sheds_infeasible`` (``policy="edf"``), a queued
+        request whose optimistic modeled service bound no longer fits its
+        remaining deadline budget is shed proactively with
+        ``DeadlineExceeded(infeasible=True)`` — still a typed resolve,
+        never a hang.
+      * **Preemption** (``policy="edf"``; never under FIFO): when every
+        slot is busy and the queued head strictly outranks the weakest
+        in-flight row — higher ``Request.priority``, or an earlier
+        effective deadline within the same tier — that row is evicted at
+        the chunk boundary through the SAME path a cancel takes (slot
+        freed, device row frozen, dispatched telemetry still replayed so
+        the shared modeled clock stays consistent), except its handle is
+        NOT finalized: it is requeued order-preserving and re-prefilled
+        from scratch when re-admitted (resume-without-recompute belongs
+        to the prefix-cache roadmap item). Its tokens are bit-identical
+        across incarnations (per-row math is row-local and PRNG streams
+        are token-position-indexed), the handle's stream suppresses
+        already-delivered tokens, and the final result reports
+        ``preempted`` with queue-wait/TTFT accounting restarted at the
+        final admission. Rows that were NOT preempted keep bit-identical
+        tokens; at most one preemption fires per boundary. Requests the
+        policy never reorders around or preempts behave exactly as under
+        FIFO.
+      * **Pressure degradation** (``policy="edf"``): an
+        :class:`~repro.serving.policy.SLOPressure` signal (queue depth
+        per slot, aggregate deadline headroom) walks a hysteresis-guarded
+        ladder of host-side
+        :class:`~repro.core.orchestrator.DegradeOverride` rungs — shrink
+        the replayed Critical set, tighten ``prefetch_topk``, and at the
+        last rung skip sub-critical experts outright ("4/0"). The device
+        program is untouched: TOKENS ARE BIT-IDENTICAL AT EVERY RUNG and
+        no rung adds a jit trace (the retrace ladder stays
+        ``live_cap_for``); only the modeled TTFT/TPOT accounting
+        degrades, and full quality is restored when pressure clears. Rung
+        installs ride the FIFO replay stream, so in the modeled timeline
+        a precision shift lands exactly at its chunk boundary. The
+        current rung, transitions, shed/preempt counters are all visible
+        in :meth:`health`.
       * **Close**: :meth:`close` drains what finished, then resolves
         every still-unresolved handle with :class:`SessionClosed` so no
         ``result(drive=False)``/``stream(drive=False)`` waiter blocks.
@@ -283,6 +329,11 @@ class ContinuousBatchingScheduler:
         self._last_fault: Optional[BaseException] = None
         self._max_queue = self.scfg.max_queue
         self._faults = getattr(engine, "faults", None) or NO_FAULTS
+        # SLO policy layer (FIFO by default: every hook is a no-op and
+        # the scheduler's behavior is byte-for-byte the pre-policy path)
+        self._policy = make_policy(self.scfg.policy)
+        self._pressure_rung = 0
+        self._est_cache: dict = {}   # (prompt_len, max_new) -> modeled s
 
     # ----------------------------------------------------------- helpers
     def _slot_budget(self, requests: Sequence[Request]) -> int:
@@ -348,7 +399,9 @@ class ContinuousBatchingScheduler:
     def _ensure_started(self, *, num_slots: Optional[int] = None,
                         slots_len: Optional[int] = None,
                         pipeline: Optional[bool] = None,
-                        max_queue: Optional[int] = None) -> None:
+                        max_queue: Optional[int] = None,
+                        policy: Union[str, SchedulingPolicy, None] = None
+                        ) -> None:
         if self._started:
             return
         from repro.serving.engine import ReplayStream
@@ -356,6 +409,8 @@ class ContinuousBatchingScheduler:
         engine, cfg = self.engine, self.engine.cfg
         if max_queue is not None:
             self._max_queue = max_queue
+        if policy is not None:
+            self._policy = make_policy(policy)
         self._pipeline = self.scfg.pipeline if pipeline is None else pipeline
         b = num_slots or self._num_slots or self.scfg.num_slots
         self._b = max(1, b)
@@ -518,8 +573,12 @@ class ContinuousBatchingScheduler:
 
         Fault-tolerance work rides the same boundary, in order: finish
         recovering from a replay fault (fail+free affected slots, swap to
-        inline replay), shed queued requests whose deadlines expired,
-        then the sweep also evicts in-flight rows past ``deadline_s``."""
+        inline replay), shed queued requests whose deadlines expired (and,
+        under an SLO policy, queued requests whose modeled service bound
+        proves them infeasible), then the sweep also evicts in-flight rows
+        past ``deadline_s``. The SLO policy layer rides it too: the
+        pressure ladder re-evaluates its rung, and at most one
+        chunk-boundary preemption fires before admission."""
         if self.closed:
             raise SessionClosed("serving session is closed")
         if not self._started:
@@ -527,6 +586,8 @@ class ContinuousBatchingScheduler:
         progress = self._recover_replay()
         progress |= self._shed_expired()
         progress |= self._sweep_cancelled()
+        self._update_pressure()
+        progress |= self._preempt_boundary()
         progress |= self._admit_boundary()
         if self._done.all():
             return progress
@@ -538,9 +599,20 @@ class ContinuousBatchingScheduler:
         (``deadline_s`` or ``ttft_deadline_s``, measured from submission)
         has already expired: they could not possibly meet it, so they
         resolve with a typed :class:`DeadlineExceeded` instead of wasting
-        an admission wave's prefill on them."""
+        an admission wave's prefill on them.
+
+        Under a policy with ``sheds_infeasible`` (e.g. ``"edf"``), the
+        same pass also sheds PROACTIVELY: a queued request whose
+        optimistic modeled service bound
+        (:func:`repro.serving.policy.estimate_service_s`, cached per
+        request shape) no longer fits its remaining deadline budget is
+        provably hopeless and resolves with
+        ``DeadlineExceeded(infeasible=True)`` now, instead of burning a
+        slot until wall-clock expiry."""
+        pol = self._policy
         now = time.perf_counter()
         shed: List[RequestHandle] = []
+        infeasible: List[RequestHandle] = []
         with self._lock:
             if not self._queue:
                 return False
@@ -552,18 +624,145 @@ class ContinuousBatchingScheduler:
                         or (r.ttft_deadline_s is not None
                             and waited > r.ttft_deadline_s):
                     shed.append(h)
+                elif pol.sheds_infeasible and pol.infeasible(
+                        h, now, self._service_estimate(r)):
+                    infeasible.append(h)
                 else:
                     keep.append(h)
-            if not shed:
+            if not shed and not infeasible:
                 return False
             self._queue = keep
             self._health.deadline_shed += len(shed)
+            self._health.infeasible_shed += len(infeasible)
         for h in shed:
             req = h.request
             h._finish_error(DeadlineExceeded(
                 f"{h.request_id}: shed after {now - h.submit_t:.3f}s in "
                 f"queue (deadline_s={req.deadline_s}, "
                 f"ttft_deadline_s={req.ttft_deadline_s})"))
+        for h in infeasible:
+            req = h.request
+            h._finish_error(DeadlineExceeded(
+                f"{h.request_id}: provably infeasible — modeled service "
+                f"bound {self._service_estimate(req):.4f}s exceeds the "
+                f"remaining deadline budget after {now - h.submit_t:.3f}s "
+                f"queued (deadline_s={req.deadline_s}, "
+                f"ttft_deadline_s={req.ttft_deadline_s})",
+                infeasible=True))
+        return True
+
+    def _service_estimate(self, request: Request) -> float:
+        """Optimistic modeled service bound for one request (policy
+        feasibility input), cached per (prompt_len, max_new_tokens)."""
+        fn = getattr(self._policy, "service_estimate_fn", None)
+        if fn is not None:
+            return float(fn(request))
+        key = (request.prompt_len, request.max_new_tokens)
+        est = self._est_cache.get(key)
+        if est is None:
+            from repro.serving.policy import estimate_service_s
+            est = estimate_service_s(self.engine.cost, self.engine.cfg,
+                                     request)
+            self._est_cache[key] = est
+        return est
+
+    def _update_pressure(self) -> None:
+        """Re-evaluate the SLO pressure ladder (policies without a ladder
+        — FIFO included — keep this a no-op). A rung change installs the
+        rung's host-side :class:`~repro.core.orchestrator.DegradeOverride`
+        on the shared orchestrator THROUGH the replay stream, so in the
+        modeled timeline the precision shift lands exactly at this
+        boundary — never mid-chunk, never racing the worker."""
+        pol = self._policy
+        if pol.ladder is None or self._orch is None:
+            return
+        now = time.perf_counter()
+        with self._lock:
+            queued = list(self._queue)
+        states = [st for st in self._states if st is not None]
+        headrooms = [
+            h.submit_t + b - now
+            for h in queued
+            if (b := effective_deadline(h.request)) != float("inf")
+        ] + [
+            st.handle.submit_t + b - now
+            for st in states
+            if (b := effective_deadline(st.request)) != float("inf")
+        ]
+        pressure = SLOPressure(
+            queue_depth=len(queued), in_flight=len(states), slots=self._b,
+            min_headroom_s=min(headrooms) if headrooms else None,
+            mean_headroom_s=(sum(headrooms) / len(headrooms)
+                             if headrooms else None))
+        rung = pol.rung_for(pressure, self._pressure_rung)
+        if rung == self._pressure_rung:
+            return
+        try:
+            self._faults.fire("degrade.shift",
+                              from_rung=self._pressure_rung, to_rung=rung)
+        except InjectedFault as e:
+            # chaos: a faulted shift is SKIPPED — the session simply stays
+            # at its current rung; nothing fails, nobody's handle resolves
+            self._health.last_fault = repr(e)
+            self._last_fault = e
+            return
+        self._pressure_rung = rung
+        self._health.pressure_rung = rung
+        self._health.rung_transitions += 1
+        override = pol.ladder.override_for(rung)
+        # epoch-guarded like every replay job: after a replay fault the
+        # stale install is skipped and _recover_replay re-installs the
+        # current rung on the fresh orchestrator directly
+        self._submit_replay(
+            partial(self._orch.set_degrade, override), [])
+
+    def _preempt_boundary(self) -> bool:
+        """At most ONE chunk-boundary preemption per step, under a
+        preemptive policy with every slot busy: the weakest in-flight row
+        (policy-chosen victim) is evicted through the existing eviction
+        path — slot freed, device row frozen, its already-dispatched
+        telemetry still replayed so the modeled timeline stays consistent
+        — and its handle is requeued order-preserving (re-prefilled from
+        scratch on resume; tokens are bit-identical by construction, and
+        the handle's stream suppresses re-delivered tokens). The freed
+        slot is taken by the urgent request at THIS boundary's admission
+        wave."""
+        pol = self._policy
+        if not pol.preemptive:
+            return False
+        in_flight = [(r, st) for r, st in enumerate(self._states)
+                     if st is not None]
+        free = any(self._done[r] and self._states[r] is None
+                   for r in range(self._b))
+        with self._lock:
+            queued = list(self._queue)
+        if free or not queued or not in_flight:
+            return False
+        decision = pol.preempt(queued, in_flight, time.perf_counter())
+        if decision is None:
+            return False
+        head, (r, st) = decision
+        try:
+            self._faults.fire("preempt.evict", slot=r,
+                              victim=st.handle.request_id,
+                              urgent=head.request_id)
+        except InjectedFault as e:
+            # chaos: a faulted preemption is ABORTED — the victim keeps
+            # its slot, the urgent request stays queued; nothing fails
+            self._health.last_fault = repr(e)
+            self._last_fault = e
+            return False
+        # the existing eviction path (same as cancel/deadline eviction),
+        # minus the finalize: the handle goes back to the queue instead
+        self._states[r] = None
+        self._done[r] = True     # device row freezes from now on
+        st.handle._preempted += 1
+        self._health.preemptions += 1
+        with self._lock:
+            # order-preserving requeue: queue front, so under FIFO-ish
+            # ties the victim re-admits before anything submitted later;
+            # the policy's admission order decides who takes the slot
+            self._queue.appendleft(st.handle)
         return True
 
     def _sweep_cancelled(self) -> bool:
@@ -620,6 +819,15 @@ class ContinuousBatchingScheduler:
                 if self._done[r] and self._states[r] is None]
         if not free or not self._queue:
             return False
+        if self._policy.reorders:
+            # policy admission order, re-evaluated once per boundary (a
+            # stable sort: no-priority/no-deadline queues keep their FIFO
+            # order bit-for-bit). The FIFO policy never touches the queue.
+            now0 = time.perf_counter()
+            with self._lock:
+                if len(self._queue) > 1:
+                    self._queue = deque(
+                        self._policy.order(list(self._queue), now0))
         n_survivors = 0
         cap: Optional[int] = None   # ladder: bound on a retried wave size
         waves = []   # (rcaches, src rows, first tokens, states)
@@ -946,6 +1154,13 @@ class ContinuousBatchingScheduler:
                 self._done[r] = True
                 progress = True
         self._orch = self.engine._make_orchestrator()  # fresh clock+cache
+        if self._orch is not None and self._policy.ladder is not None:
+            # any queued set_degrade install died with the old stream
+            # (stale epoch): put the fresh orchestrator on the CURRENT
+            # rung directly — no concurrency, the old worker is draining
+            # stale no-ops and the new stream is inline on this thread
+            self._orch.set_degrade(
+                self._policy.ladder.override_for(self._pressure_rung))
         old = self._stream
         with self._lock:
             # bump AGAIN: anything submitted between the fault and now is
@@ -958,6 +1173,25 @@ class ContinuousBatchingScheduler:
         return progress
 
     # ------------------------------------------------ replay-worker side
+    def _emit(self, st: _SlotState, phase: str, tokens: List[int],
+              modeled_s: float, tok_start: int) -> None:
+        """Push one TokenChunk stream event, suppressing tokens a
+        pre-preemption incarnation of this handle already delivered
+        (``tok_start`` is the index of ``tokens[0]`` in the request's
+        full output; tokens are bit-identical across incarnations, so
+        skipping the overlap keeps the stream's concatenation exactly
+        equal to ``result().tokens``). Replay-worker context only — the
+        single writer of ``handle._streamed``."""
+        h = st.handle
+        end = tok_start + len(tokens)
+        skip = max(0, h._streamed - tok_start)
+        new = tokens[skip:]
+        if not new:
+            return   # fully re-delivered already (resumed prefix replay)
+        h._push_event(TokenChunk(request_id=h.request_id, phase=phase,
+                                 tokens=new, modeled_s=modeled_s))
+        h._streamed = max(h._streamed, end)
+
     def _finalize(self, st: _SlotState, *, cancelled: bool = False,
                   deadline_expired: bool = False) -> None:
         # replay-stream context: st's telemetry has fully drained.
@@ -985,7 +1219,8 @@ class ContinuousBatchingScheduler:
             decode_weight_bytes_per_tok=(
                 st.decode_weight_bytes / n_dec
                 if st.decode_timings else None),
-            cancelled=cancelled, deadline_expired=deadline_expired))
+            cancelled=cancelled, deadline_expired=deadline_expired,
+            preempted=st.handle._preempted))
 
     def _finalize_unadmitted(self, h: RequestHandle) -> None:
         """A request cancelled while still queued: nothing ran for it."""
@@ -1019,9 +1254,7 @@ class ContinuousBatchingScheduler:
             st.ttft_s = (timings[0].total_s if timings else totals[0])
             st.prefill_timing = timings[0] if timings else None
             st.prefill_weight_bytes = wbytes
-            st.handle._push_event(TokenChunk(
-                request_id=st.handle.request_id, phase="prefill",
-                tokens=[st.tokens[0]], modeled_s=float(st.ttft_s)))
+            self._emit(st, "prefill", [st.tokens[0]], float(st.ttft_s), 0)
             if st.finish_now:
                 self._finalize(st)
 
@@ -1046,9 +1279,8 @@ class ContinuousBatchingScheduler:
                 st.step_totals.extend(totals)
                 st.decode_timings.extend(timings)
                 st.decode_weight_bytes += wbytes
-                st.handle._push_event(TokenChunk(
-                    request_id=st.handle.request_id, phase="decode",
-                    tokens=new, modeled_s=float(sum(totals))))
+                self._emit(st, "decode", new, float(sum(totals)),
+                           ctx0 - st.prompt_len)
             if is_done:
                 self._finalize(st)
 

@@ -27,7 +27,7 @@ import pytest
 from repro.core.cache import MixedPrecisionLRUCache
 from repro.models import init_params
 from repro.models.config import DyMoEPolicy, ModelConfig
-from repro.serving import DyMoEEngine, EngineConfig, Request
+from repro.serving import DyMoEEngine, EDFPolicy, EngineConfig, Request
 from repro.serving.cost_model import EdgeProfile
 from repro.serving.faults import AdmissionError, DeadlineExceeded, \
     DispatchError, FaultInjector, FaultSpec, InjectedFault, NO_FAULTS, \
@@ -468,6 +468,61 @@ def test_close_resolves_every_outstanding_handle(moe_setup):
     assert session.health().status == "closed"
 
 
+# --------------------------------------------- SLO policy fault sites
+
+
+def test_preempt_fault_aborts_that_preemption_only(moe_setup, baseline):
+    """An InjectedFault at ``preempt.evict`` ABORTS the preemption — the
+    victim keeps its slot, the urgent request waits its turn, nobody
+    fails, and the fault is visible in health(). With the fault window
+    covering every attempt, the run completes preemption-free."""
+    cfg, params = moe_setup
+    eng = _engine(cfg, params, faults=FaultInjector(
+        [FaultSpec(site="preempt.evict", at=0, times=100)]))
+    session = eng.serve(num_slots=2, slots_len=96,
+                        policy=EDFPolicy(ladder=None))
+    bulk_reqs = [Request(prompt_tokens=list(range(1 + i, 9 + i)),
+                         max_new_tokens=16, request_id=f"bulk{i}")
+                 for i in range(2)]
+    bulk = [session.submit(r) for r in bulk_reqs]
+    for _ in range(16):                       # long bulk: slots stay busy
+        if session.health().in_flight == 2:
+            break
+        session.step()
+    assert session.health().in_flight == 2
+    urgent = session.submit(Request(prompt_tokens=[40, 41, 42],
+                                    max_new_tokens=2, request_id="urgent",
+                                    priority=5))
+    session.drain(cancel_queued=False)
+    health = session.health()
+    session.close()
+    assert health.preemptions == 0            # every attempt was aborted
+    assert health.last_fault is not None
+    for h in bulk + [urgent]:
+        assert h.error is None
+        assert h.result(drive=False).preempted == 0
+
+
+def test_degrade_fault_skips_rung_transition(moe_setup, baseline):
+    """An InjectedFault at ``degrade.shift`` SKIPS that rung transition —
+    the session stays at its current rung, keeps serving, and tokens stay
+    bit-identical (degradation never touches them anyway)."""
+    cfg, params = moe_setup
+    eng = _engine(cfg, params, faults=FaultInjector(
+        [FaultSpec(site="degrade.shift", at=0, times=1000)]))
+    session = eng.serve(num_slots=2, slots_len=64, policy="edf")
+    handles = [session.submit(r) for r in _script()]   # depth engages...
+    session.drain(cancel_queued=False)
+    health = session.health()
+    session.close()
+    assert health.rung_transitions == 0       # ...but every shift faulted
+    assert health.pressure_rung == 0
+    assert health.last_fault is not None
+    for h in handles:
+        assert h.error is None
+        assert h.result(drive=False).tokens == baseline[h.request_id].tokens
+
+
 # ------------------------------------------------- chaos schedule sweep
 
 
@@ -482,7 +537,20 @@ SCHEDULES = {
     "combo": [FaultSpec(site="replay.chunk", at=2),
               FaultSpec(site="device.dispatch", at=1, times=2),
               FaultSpec(site="admit.alloc", at=1)],
+    # SLO-policy sites: these schedules run under an EDF session with a
+    # mid-run priority burst (see POLICY_SCHEDULES below) so the
+    # preemption and ladder paths are actually visited
+    "preempt-evict": [FaultSpec(site="preempt.evict", at=0, times=1)],
+    "degrade-shift": [FaultSpec(site="degrade.shift", at=0, times=1)],
+    "slo-combo": [FaultSpec(site="preempt.evict", at=1),
+                  FaultSpec(site="degrade.shift", at=0, times=2),
+                  FaultSpec(site="replay.chunk", at=3)],
 }
+
+# schedules whose fault sites only exist on the policy paths: served
+# through EDF with a mid-run priority burst (tokens stay bit-identical
+# to the FIFO baseline — policy, preemption and rungs never change them)
+POLICY_SCHEDULES = {"preempt-evict", "degrade-shift", "slo-combo"}
 
 
 @pytest.mark.parametrize("name", sorted(SCHEDULES))
@@ -494,8 +562,17 @@ def test_chaos_schedule_every_handle_resolves(moe_setup, baseline, name):
     cfg, params = moe_setup
     eng = _engine(cfg, params, faults=FaultInjector(SCHEDULES[name],
                                                     seed=0))
-    session = eng.serve(num_slots=2, slots_len=64)
-    handles = [session.submit(r) for r in _script()]
+    if name in POLICY_SCHEDULES:
+        session = eng.serve(num_slots=2, slots_len=64, policy="edf")
+        reqs = _script()
+        handles = [session.submit(r) for r in reqs[:4]]
+        for _ in range(2):                      # slots busy, queue deep
+            session.step()
+        handles += [session.submit(dataclasses.replace(r, priority=3))
+                    for r in reqs[4:]]          # urgent burst: preempts
+    else:
+        session = eng.serve(num_slots=2, slots_len=64)
+        handles = [session.submit(r) for r in _script()]
     session.drain(cancel_queued=False)
 
     # a late submission AFTER the faults: the session must still serve

@@ -1,0 +1,443 @@
+"""SLO policy layer: parity gates, priority/EDF admission, preemption,
+feasibility shedding and the pressure degradation ladder.
+
+The contract under test (see ``ContinuousBatchingScheduler`` *Failure
+semantics* and :mod:`repro.serving.policy`):
+
+  * ``policy="fifo"`` (the default) is BIT-IDENTICAL — tokens AND modeled
+    TTFT/TPOT — to the pre-policy scheduler: every hook is a no-op.
+  * A no-priority / no-deadline workload is bit-identical under EVERY
+    policy: EDF's stable sort keeps FIFO order, equal ranks never
+    preempt, and degradation rungs never change tokens (host-side only).
+  * Preemption resumes the SAME handle with bit-identical tokens
+    (re-prefill regenerates them), a dedup'd stream, and the count on
+    the result + in ``health()``.
+  * Infeasible requests resolve with ``DeadlineExceeded(infeasible=True)``
+    BEFORE burning a slot; feasible ones are never touched.
+"""
+import dataclasses
+
+import jax
+import numpy as np
+import pytest
+
+from repro.core.orchestrator import DegradeOverride
+from repro.models import init_params
+from repro.models.config import DyMoEPolicy, ModelConfig
+from repro.serving import DegradationLadder, DyMoEEngine, EDFPolicy, \
+    EngineConfig, FIFOPolicy, QueueFull, Request, SLOPressure, \
+    effective_deadline, make_policy, submit_with_retry
+from repro.serving.cost_model import EdgeProfile
+from repro.serving.faults import DeadlineExceeded
+
+pytestmark = pytest.mark.timeout(300)
+
+
+@pytest.fixture(scope="module")
+def moe_setup():
+    cfg = ModelConfig(
+        name="t", arch_type="moe", num_layers=2, d_model=64, vocab_size=128,
+        num_heads=2, num_kv_heads=1, head_dim=32, num_experts=4,
+        num_experts_per_tok=2, moe_d_ff=64, capacity_factor=4.0,
+        dtype="float32", remat="none",
+        dymoe=DyMoEPolicy(low_bits=2, retention=0.75))
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    return cfg, params
+
+
+def _engine(cfg, params, **kw):
+    kw.setdefault("decode_chunk", 4)
+    return DyMoEEngine(cfg, params, EngineConfig(
+        profile=EdgeProfile().with_vram(16), **kw))
+
+
+def _script(**extra):
+    rng = np.random.default_rng(3)
+    return [Request(prompt_tokens=rng.integers(1, 128, n).tolist(),
+                    max_new_tokens=m, request_id=f"req-{i}", **extra)
+            for i, (n, m) in enumerate(
+                [(8, 6), (5, 4), (9, 8), (6, 3), (7, 5), (4, 7)])]
+
+
+def _run(eng, policy, reqs, num_slots=2):
+    """Serve ``reqs`` under ``policy``; return (handles, health)."""
+    session = eng.serve(num_slots=num_slots, slots_len=64, policy=policy)
+    handles = [session.submit(r) for r in reqs]
+    session.drain(cancel_queued=False)
+    health = session.health()
+    session.close()
+    assert all(h.done for h in handles)
+    return handles, health
+
+
+# --------------------------------------------------- DegradeOverride unit
+
+
+def test_degrade_override_apply_shrinks_critical_only():
+    crit = np.array([[1, 1, 1, 1, 0, 0, 0, 0]], bool)
+    act = np.array([[1, 1, 1, 1, 1, 1, 0, 0]], bool)
+    c2, a2 = DegradeOverride(critical_keep=0.5).apply(crit, act)
+    # first half of the critical ids (ascending) survive; active untouched
+    assert c2.tolist() == [[1, 1, 0, 0, 0, 0, 0, 0]]
+    assert np.array_equal(a2, act)
+    # force_skip: demoted criticals leave the active set too ("4/0")
+    c3, a3 = DegradeOverride(critical_keep=0.5, force_skip=True).apply(
+        crit, act)
+    assert np.array_equal(a3, c3)
+    # the demoted view is always a SUBSET of the raw one
+    assert np.all(c2 <= crit) and np.all(c3 <= crit) and np.all(a3 <= act)
+
+
+def test_degrade_override_keeps_at_least_one_critical():
+    crit = np.array([[1, 0, 0, 0]], bool)
+    act = np.ones((1, 4), bool)
+    c2, _ = DegradeOverride(critical_keep=0.01).apply(crit, act)
+    assert int(c2.sum()) == 1          # never demotes the whole set
+    # no criticals at all stays no criticals (no invention)
+    z = np.zeros((1, 4), bool)
+    cz, _ = DegradeOverride(critical_keep=0.5).apply(z, act)
+    assert not cz.any()
+
+
+def test_degrade_override_validation():
+    with pytest.raises(ValueError, match="critical_keep"):
+        DegradeOverride(critical_keep=0.0)
+    with pytest.raises(ValueError, match="critical_keep"):
+        DegradeOverride(critical_keep=1.5)
+    with pytest.raises(ValueError, match="prefetch_topk"):
+        DegradeOverride(prefetch_topk=-1)
+
+
+# ------------------------------------------------------------ ladder unit
+
+
+def test_ladder_walks_with_hysteresis():
+    lad = DegradationLadder()          # engage (1,2,4), release (.5,1,2)
+    p = lambda d: SLOPressure(queue_depth=d, in_flight=2, slots=2)
+    r = lad.rung_for(p(2), 0)          # depth/slot 1.0 -> rung 1
+    assert r == 1
+    r = lad.rung_for(p(8), r)
+    assert r == 3                      # depth/slot 4.0 -> top rung
+    # depth/slot 1.5: below engage[2] but ABOVE release[2]=2? no — 1.5<2,
+    # so rung 3 releases to 2; rung 2's release (1.0) not met -> stays 2
+    r = lad.rung_for(p(3), r)
+    assert r == 2
+    r = lad.rung_for(p(3), r)          # oscillation: same depth, no flap
+    assert r == 2
+    r = lad.rung_for(p(0), r)
+    assert r == 0                      # pressure gone -> full quality
+
+
+def test_ladder_negative_headroom_bumps_one_rung():
+    lad = DegradationLadder()
+    late = SLOPressure(queue_depth=2, in_flight=2, slots=2,
+                       min_headroom_s=-0.5)
+    assert lad.rung_for(late, 0) == 2  # depth says 1, lateness bumps to 2
+    idle = SLOPressure(queue_depth=0, in_flight=2, slots=2,
+                       min_headroom_s=-0.5)
+    assert lad.rung_for(idle, 0) == 0  # nothing queued: nothing to shed
+
+
+def test_ladder_validation():
+    with pytest.raises(ValueError, match="hysteresis"):
+        DegradationLadder(engage=(1.0,), release=(1.0,),
+                          overrides=(DegradeOverride(prefetch_topk=1),))
+    with pytest.raises(ValueError, match="arity"):
+        DegradationLadder(engage=(1.0, 2.0), release=(0.5,),
+                          overrides=(DegradeOverride(prefetch_topk=1),))
+
+
+# --------------------------------------------------- ordering / key unit
+
+
+def test_effective_deadline_takes_the_tighter():
+    assert effective_deadline(Request(prompt_tokens=[1])) == float("inf")
+    assert effective_deadline(Request(prompt_tokens=[1],
+                                      deadline_s=3.0)) == 3.0
+    assert effective_deadline(Request(
+        prompt_tokens=[1], deadline_s=3.0, ttft_deadline_s=1.0)) == 1.0
+
+
+def test_edf_order_is_fifo_without_slo_fields():
+    class H:
+        def __init__(self, i, pr=0, dl=None):
+            self.index = i
+            self.submit_t = float(i)
+            self.request = Request(prompt_tokens=[1], priority=pr,
+                                   deadline_s=dl)
+
+    plain = [H(0), H(1), H(2)]
+    assert [h.index for h in EDFPolicy().order(plain, 0.0)] == [0, 1, 2]
+    # priority dominates, then absolute deadline, then submission order
+    mixed = [H(0), H(1, pr=1), H(2, dl=0.5), H(3, dl=9.0)]
+    assert [h.index for h in EDFPolicy().order(mixed, 0.0)] == [1, 2, 3, 0]
+
+
+def test_make_policy_resolution():
+    assert isinstance(make_policy(None), FIFOPolicy)
+    assert isinstance(make_policy("fifo"), FIFOPolicy)
+    assert isinstance(make_policy("edf"), EDFPolicy)
+    pol = EDFPolicy(preempt_enabled=False)
+    assert make_policy(pol) is pol
+    with pytest.raises(ValueError, match="unknown scheduling policy"):
+        make_policy("lifo")
+
+
+def test_request_priority_validation():
+    Request(prompt_tokens=[1], priority=-2)      # any int is a tier
+    with pytest.raises(ValueError, match="priority"):
+        Request(prompt_tokens=[1], priority=1.5)
+    with pytest.raises(ValueError, match="priority"):
+        Request(prompt_tokens=[1], priority=True)
+
+
+# ----------------------------------------------------------- parity gates
+
+
+def test_fifo_policy_is_bit_identical_to_default(moe_setup):
+    """The explicit FIFO policy, the name, and the default must all be
+    the SAME run: tokens and modeled TTFT/TPOT bit-identical."""
+    cfg, params = moe_setup
+    eng = _engine(cfg, params)
+    base, bh = _run(eng, None, _script())
+    for policy in ("fifo", FIFOPolicy()):
+        hs, health = _run(eng, policy, _script())
+        for h, b in zip(hs, base):
+            r, rb = h.result(drive=False), b.result(drive=False)
+            assert r.tokens == rb.tokens
+            assert r.ttft_s == rb.ttft_s
+            assert r.tpot_s == rb.tpot_s
+            assert r.preempted == 0
+        assert health.pressure_rung == 0
+        assert health.rung_transitions == 0
+        assert health.preemptions == 0
+        assert health.infeasible_shed == 0
+
+
+def test_edf_without_slo_fields_is_preemption_free_parity(moe_setup):
+    """No priorities, no deadlines: EDF's stable sort keeps FIFO order
+    and equal ranks never preempt — with the ladder off, the run is
+    bit-identical (tokens AND modeled numbers) to FIFO."""
+    cfg, params = moe_setup
+    eng = _engine(cfg, params)
+    base, _ = _run(eng, "fifo", _script())
+    hs, health = _run(eng, EDFPolicy(ladder=None), _script())
+    for h, b in zip(hs, base):
+        r, rb = h.result(drive=False), b.result(drive=False)
+        assert r.tokens == rb.tokens
+        assert r.ttft_s == rb.ttft_s
+        assert r.tpot_s == rb.tpot_s
+    assert health.preemptions == 0
+    assert health.rung_transitions == 0
+
+
+def test_tokens_bit_identical_at_every_ladder_rung(moe_setup):
+    """Full EDF (default ladder) under queue pressure: the ladder engages
+    and releases, but tokens NEVER change — degradation is host-side
+    accounting only. Modeled latency is allowed (expected) to differ."""
+    cfg, params = moe_setup
+    eng = _engine(cfg, params)
+    base, _ = _run(eng, "fifo", _script())
+    hs, health = _run(eng, "edf", _script())   # 6 reqs / 2 slots: depth>1
+    assert health.rung_transitions >= 2        # engaged AND released
+    for h, b in zip(hs, base):
+        assert h.error is None
+        assert h.result(drive=False).tokens == b.result(drive=False).tokens
+
+
+def test_ladder_rung_restores_after_pressure_clears(moe_setup):
+    cfg, params = moe_setup
+    eng = _engine(cfg, params)
+    session = eng.serve(num_slots=2, slots_len=64, policy="edf")
+    handles = [session.submit(r) for r in _script()]
+    rungs = set()
+    while session.step():
+        rungs.add(session.health().pressure_rung)
+    session.flush()
+    for _ in range(4):     # idle boundaries keep re-evaluating pressure
+        session.step()
+    assert session.health().pressure_rung == 0   # full quality restored
+    assert max(rungs) >= 1                       # ...after real pressure
+    session.close()
+    assert all(h.error is None for h in handles)
+
+
+# ------------------------------------------------------ priority admission
+
+
+def test_priority_admits_before_earlier_bulk(moe_setup):
+    """With one busy slot and no preemption, a priority submission admits
+    ahead of bulk requests that were queued BEFORE it."""
+    cfg, params = moe_setup
+    eng = _engine(cfg, params)
+    pol = EDFPolicy(preempt_enabled=False, ladder=None)
+    session = eng.serve(num_slots=1, slots_len=64, policy=pol)
+    first = session.submit(Request(prompt_tokens=[1, 2, 3, 4],
+                                   max_new_tokens=8, request_id="first"))
+    session.step()                   # occupy the slot
+    bulk = [session.submit(Request(prompt_tokens=[5 + i, 6 + i],
+                                   max_new_tokens=2,
+                                   request_id=f"bulk{i}"))
+            for i in range(2)]
+    vip = session.submit(Request(prompt_tokens=[9, 10], max_new_tokens=2,
+                                 request_id="vip", priority=3))
+    session.drain(cancel_queued=False)
+    session.close()
+    for h in [first, vip] + bulk:
+        assert h.error is None
+    # vip waited less than bulk requests submitted before it
+    assert (vip.result(drive=False).queue_wait_s
+            < min(b.result(drive=False).queue_wait_s for b in bulk))
+
+
+# ------------------------------------------------------------- preemption
+
+
+def test_preemption_resumes_bit_identical(moe_setup):
+    """An urgent arrival preempts the weakest busy row; the victim's
+    FINAL tokens are bit-identical to its unpreempted run (re-prefill
+    regenerates them), its stream never repeats a token, and the
+    preemption is counted on the result and in health()."""
+    cfg, params = moe_setup
+    eng = _engine(cfg, params)
+    bulk_reqs = [Request(prompt_tokens=list(range(1 + i, 9 + i)),
+                         max_new_tokens=16, request_id=f"bulk{i}")
+                 for i in range(2)]
+    base, _ = _run(eng, "fifo", bulk_reqs)
+    baseline = {h.request_id: h.result(drive=False) for h in base}
+
+    session = eng.serve(num_slots=2, slots_len=96, policy=EDFPolicy())
+    bulk = [session.submit(r) for r in bulk_reqs]
+    while not session.health().in_flight == 2:   # both slots busy
+        session.step()
+    urgent = session.submit(Request(prompt_tokens=list(range(40, 44)),
+                                    max_new_tokens=2, request_id="urgent",
+                                    priority=5))
+    session.drain(cancel_queued=False)
+    health = session.health()
+
+    assert urgent.error is None
+    assert health.preemptions >= 1
+    preempted = [h for h in bulk
+                 if h.result(drive=False).preempted > 0]
+    assert preempted                 # somebody actually lost a slot
+    for h in bulk:
+        r = h.result(drive=False)
+        assert r.tokens == baseline[h.request_id].tokens
+        # stream dedup: concatenated events == final tokens, no repeats
+        streamed = [t for ev in h.stream(drive=False) for t in ev.tokens]
+        assert streamed == r.tokens
+    session.close()
+
+
+def test_equal_rank_never_preempts(moe_setup):
+    """All-default priorities and no deadlines: EDF never preempts, even
+    with the queue backed up — preemption-free by construction."""
+    cfg, params = moe_setup
+    eng = _engine(cfg, params)
+    hs, health = _run(eng, EDFPolicy(ladder=None), _script())
+    assert health.preemptions == 0
+    assert all(h.result(drive=False).preempted == 0 for h in hs)
+
+
+# ------------------------------------------------------- infeasible shed
+
+
+def test_infeasible_request_shed_typed(moe_setup):
+    """A queued request whose modeled service bound exceeds its deadline
+    budget resolves with DeadlineExceeded(infeasible=True) BEFORE
+    admission; feasible siblings are untouched."""
+    cfg, params = moe_setup
+    eng = _engine(cfg, params)
+    # deterministic estimate: long requests are hopeless, short ones free
+    pol = EDFPolicy(preempt_enabled=False, ladder=None,
+                    service_estimate_fn=lambda r:
+                    1e9 if r.max_new_tokens > 10 else 0.0)
+    session = eng.serve(num_slots=1, slots_len=64, policy=pol)
+    ok = session.submit(Request(prompt_tokens=[1, 2], max_new_tokens=3,
+                                request_id="ok", deadline_s=60.0))
+    doomed = session.submit(Request(prompt_tokens=[3, 4],
+                                    max_new_tokens=20, request_id="doomed",
+                                    deadline_s=60.0))
+    free = session.submit(Request(prompt_tokens=[5, 6], max_new_tokens=3,
+                                  request_id="free"))   # no deadline
+    session.drain(cancel_queued=False)
+    session.close()
+    assert ok.error is None and free.error is None
+    assert isinstance(doomed.error, DeadlineExceeded)
+    assert doomed.error.infeasible
+    with pytest.raises(DeadlineExceeded, match="infeasible"):
+        doomed.result(drive=False)
+    assert session.health().infeasible_shed == 1
+    assert session.health().deadline_shed == 0   # distinct counters
+
+
+def test_feasibility_uses_modeled_estimate(moe_setup):
+    """Without an injected estimate the scheduler prices the request via
+    EdgeCostModel: positive, finite, monotone in max_new_tokens."""
+    from repro.serving.policy import estimate_service_s
+    cfg, params = moe_setup
+    eng = _engine(cfg, params)
+    e2 = estimate_service_s(eng.cost, cfg,
+                            Request(prompt_tokens=[1] * 8, max_new_tokens=2))
+    e32 = estimate_service_s(eng.cost, cfg,
+                             Request(prompt_tokens=[1] * 8,
+                                     max_new_tokens=32))
+    assert 0.0 < e2 < e32 < float("inf")
+    # a generous deadline against the tiny modeled bound: NOT shed
+    hs, health = _run(eng, "edf",
+                      [Request(prompt_tokens=[1, 2, 3], max_new_tokens=3,
+                               request_id="r", deadline_s=60.0)])
+    assert hs[0].error is None
+    assert health.infeasible_shed == 0
+
+
+# ------------------------------------------- submit_with_retry satellite
+
+
+def test_retry_backoff_jitter_is_seeded_and_bounded(moe_setup):
+    cfg, params = moe_setup
+    eng = _engine(cfg, params)
+
+    def sleeps_for(seed):
+        session = eng.serve(num_slots=1, slots_len=64, max_queue=1)
+        session.submit(_script()[0])
+        slept = []
+        with pytest.raises(QueueFull):
+            submit_with_retry(session, _script()[1], attempts=4,
+                              backoff_s=0.01, retry_seed=seed,
+                              sleep=slept.append)
+        session.drain(cancel_queued=False)
+        session.close()
+        return slept
+
+    a, b = sleeps_for(7), sleeps_for(7)
+    assert a == b and len(a) == 3          # reproducible schedule
+    assert a != sleeps_for(8)              # ...but actually jittered
+    for i, d in enumerate(a):              # within the de-jittered bounds
+        assert 0.0 < d <= 0.01 * 2 ** i
+
+
+def test_retry_max_elapsed_caps_total_backoff(moe_setup):
+    cfg, params = moe_setup
+    eng = _engine(cfg, params)
+    session = eng.serve(num_slots=1, slots_len=64, max_queue=1)
+    session.submit(_script()[0])
+    slept = []
+    with pytest.raises(QueueFull):
+        submit_with_retry(session, _script()[1], attempts=50,
+                          backoff_s=0.01, jitter=0.0, max_elapsed_s=0.05,
+                          sleep=slept.append)
+    session.drain(cancel_queued=False)
+    session.close()
+    assert sum(slept) <= 0.05              # gave up before the cap, not
+    assert len(slept) < 49                 # after burning all 50 attempts
+
+
+def test_retry_jitter_validation(moe_setup):
+    cfg, params = moe_setup
+    eng = _engine(cfg, params)
+    session = eng.serve(num_slots=1, slots_len=64)
+    with pytest.raises(ValueError, match="jitter"):
+        submit_with_retry(session, _script()[0], jitter=1.5)
+    session.close()
