@@ -646,6 +646,101 @@ def overload_burst_serving(smoke: bool = False) -> List[dict]:
     return rows
 
 
+def router_scaling(smoke: bool = False) -> List[dict]:
+    """Aggregate decode throughput of the multi-replica serving tier:
+    the same ragged workload pushed through ``ClusterRouter.replicate``
+    at 1 / 2 / 4 replicas over ONE shared engine (weights + jit caches
+    shared, per-replica sessions and driver threads), least-loaded
+    placement, threaded drivers.
+
+    Replicas decode CONCURRENTLY — each drives its own 2-slot session on
+    its own thread against the shared jitted model — so aggregate tok/s
+    should grow with the replica count up to the core budget. ``--smoke``
+    asserts the cluster acceptance contract: per-request tokens
+    bit-identical to solo ``generate`` at EVERY replica count (the router
+    adds zero numeric deviation), every handle resolved, merged health
+    counters consistent — and tok/s strictly increasing in replica count
+    only on >2-core runners (a 1-2 core runner has nowhere to run the
+    second replica's driver; parity is still asserted there)."""
+    import os
+
+    from repro.serving import ClusterRouter
+
+    rng = np.random.default_rng(1)
+    n_req = 16 if smoke else 48
+    specs = [(int(rng.choice([8, 16, 24])), int(rng.integers(4, 9)))
+             for _ in range(n_req)]
+    requests = [Request(prompt_tokens=rng.integers(
+        1, BENCH_MOE.vocab_size, s).tolist(), max_new_tokens=m,
+        request_id=f"rs-{i}") for i, (s, m) in enumerate(specs)]
+    params = init_params(BENCH_MOE, jax.random.PRNGKey(0))
+    eng = DyMoEEngine(BENCH_MOE, params, EngineConfig(decode_chunk=8))
+    solo = [eng.generate(r).tokens for r in requests]   # also warms jit
+
+    def serve(n):
+        router = ClusterRouter.replicate(eng, n, num_slots=2,
+                                         slots_len=64, threaded=True)
+        try:
+            router.submit(dataclasses.replace(            # warm the pool
+                requests[0], request_id="rs-warm")).result()
+            t0 = time.perf_counter()
+            handles = [router.submit(r) for r in requests]
+            results = [h.result() for h in handles]
+            wall = time.perf_counter() - t0
+            health = router.health()
+        finally:
+            router.close()
+        return results, wall, health
+
+    counts = (1, 2, 4)
+    serve(1)   # compile every admission/decode shape ONCE up front: the
+    #            engine's jit cache is shared across pools, so without
+    #            this the first-measured count eats all compiles and the
+    #            later counts inherit a warm cache (phantom "scaling")
+    try:
+        n_cores = len(os.sched_getaffinity(0))
+    except AttributeError:  # non-Linux
+        n_cores = os.cpu_count() or 1
+    rows, tok_s, parity = [], {}, {}
+    for n in counts:
+        results, wall, health = serve(n)
+        new_tokens = sum(len(r.tokens) for r in results)
+        tok_s[n] = new_tokens / wall
+        parity[n] = all(r.tokens == s for r, s in zip(results, solo))
+        rows.append(dict(
+            bench="router_scaling", arch=BENCH_MOE.name, replicas=n,
+            num_requests=n_req, num_slots=2, new_tokens=new_tokens,
+            decode_tok_s=round(tok_s[n], 1),
+            speedup_vs_1=round(tok_s[n] / tok_s[1], 2),
+            solo_parity=parity[n], n_cores=n_cores,
+            submitted=health.submitted, completed=health.completed,
+            reroutes=health.reroutes, restarts=health.restarts,
+            status=health.status))
+    if smoke:
+        assert all(parity.values()), (
+            "routing changed a request's tokens: "
+            f"{ {n: p for n, p in parity.items() if not p} }")
+        for r in rows:
+            # +1 for the per-pool warm-up request
+            assert r["submitted"] == n_req + 1 and \
+                r["completed"] == n_req + 1, r
+            assert r["status"] == "ok" and r["restarts"] == 0, r
+        # scaling is asserted pairwise, each pair gated on having the
+        # cores to EXPRESS that concurrency (N driver threads + the
+        # submitting thread): an oversubscribed pool measures context-
+        # switch thrash, not the tier — e.g. 4 replicas on this repo's
+        # single-core dev box clock in at 0.2x, all parity gates green
+        if n_cores > 2:
+            assert tok_s[1] < tok_s[2], (
+                "2-replica aggregate decode throughput did not beat "
+                f"solo: { {n: round(t, 1) for n, t in tok_s.items()} }")
+        if n_cores > 4:
+            assert tok_s[2] < tok_s[4], (
+                "4-replica aggregate decode throughput did not beat "
+                f"2-replica: { {n: round(t, 1) for n, t in tok_s.items()} }")
+    return rows
+
+
 def run(smoke: bool = False) -> List[dict]:
     rows = []
     if not smoke:
@@ -672,6 +767,7 @@ def run(smoke: bool = False) -> List[dict]:
     rows.extend(continuous_vs_static_batching(smoke=smoke))
     rows.extend(sampled_continuous_serving(smoke=smoke))
     rows.extend(overload_burst_serving(smoke=smoke))
+    rows.extend(router_scaling(smoke=smoke))
     return rows
 
 

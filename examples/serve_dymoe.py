@@ -18,7 +18,13 @@
      slots at a chunk boundary (the victims resume with bit-identical
      tokens), queue pressure walks the precision degradation ladder,
      and a provably-infeasible request is shed typed before wasting a
-     prefill.
+     prefill;
+  5. scale out to a MULTI-REPLICA tier behind a ``ClusterRouter``:
+     two replicas over one shared engine, least-loaded placement with
+     cross-replica backpressure — then one replica's replay stream
+     faults MID-RUN, the router quarantines + drains it through the
+     recovery path and cold-restarts it while the other replica keeps
+     serving; every token stays bit-identical to solo ``generate``.
 
     PYTHONPATH=src python examples/serve_dymoe.py
 """
@@ -29,9 +35,9 @@ import jax
 from repro.configs import get_config
 from repro.models import init_params
 from repro.models.config import DyMoEPolicy
-from repro.serving import DeadlineExceeded, DyMoEEngine, EDFPolicy, \
-    EngineConfig, FaultInjector, FaultSpec, Request, SamplingParams, \
-    ServingError, submit_with_retry
+from repro.serving import ClusterRouter, DeadlineExceeded, DyMoEEngine, \
+    EDFPolicy, EngineConfig, FaultInjector, FaultSpec, Request, \
+    SamplingParams, ServingError, submit_with_retry
 from repro.serving.cost_model import EdgeProfile
 
 
@@ -210,6 +216,53 @@ def overload_burst_loop(cfg, params):
     print("preempted bulk resumed bit-identical; ladder engaged+released")
 
 
+def cluster_loop(cfg, params):
+    """Multi-replica tier: least-loaded routing, a mid-run replica fault
+    the router survives by draining + cold-restarting that replica."""
+    print("\n--- multi-replica tier: router + replica fault ---")
+    eng = DyMoEEngine(cfg, params, EngineConfig(
+        profile=EdgeProfile().with_vram(12), decode_chunk=4))
+
+    def req(i):
+        return Request(prompt_tokens=list(range(1 + i, 25 + i)),
+                       max_new_tokens=8, request_id=f"req-{i}")
+
+    solo = {i: eng.generate(req(i)).tokens for i in range(10)}
+    # replica 1's FIRST decode-chunk replay job will raise mid-run;
+    # replica 0 shares the same engine but faults independently
+    router = ClusterRouter.replicate(
+        eng, 2, num_slots=1, slots_len=96,
+        faults=[None, FaultInjector([FaultSpec(site="replay.chunk",
+                                               at=1)])])
+    first = [router.submit(req(i)) for i in range(6)]
+    print("placement:", {h.request_id: h.replica for h in first})
+    for h in first:
+        try:
+            h.result()
+        except ServingError:
+            pass
+    mid = router.health()
+    # the degraded replica was drained and cold-restarted; new traffic
+    # lands on BOTH replicas again and still matches solo exactly
+    second = [router.submit(req(6 + i)) for i in range(4)]
+    results = [h.result() for h in second]
+    health = router.health()
+    router.close()
+    for h, r in zip(second, results):
+        print(f"{h.request_id}: replica={h.replica} {len(r.tokens):2d} tok"
+              f" solo_parity={r.tokens == solo[int(h.request_id[4:])]}")
+    print(f"cluster: status={health.status} restarts={health.restarts} "
+          f"submitted={health.submitted} completed={health.completed} "
+          f"per-replica=" + str([(s.submitted, s.completed)
+                                 for s in health.replicas]))
+    assert all(h.done for h in first + second)   # every handle resolved
+    assert mid.restarts >= 1                     # the fault cost a restart
+    assert health.status == "ok"                 # ...and the pool healed
+    assert {h.replica for h in second} == {0, 1}  # both serve again
+    assert all(r.tokens == solo[6 + i] for i, r in enumerate(results))
+    print("replica faulted, drained, cold-restarted; tokens solo-exact")
+
+
 def main():
     cfg = get_config("qwen2-moe-a2.7b").reduced()
     params = init_params(cfg, jax.random.PRNGKey(0))
@@ -217,6 +270,7 @@ def main():
     step_driven_loop(cfg, params)
     fault_tolerant_loop(cfg, params)
     overload_burst_loop(cfg, params)
+    cluster_loop(cfg, params)
 
 
 if __name__ == "__main__":

@@ -17,6 +17,15 @@ Per config the linter builds:
                 ``_can_batch_admissions`` gate)
   decode_chunk  the scheduler's fused multi-step dispatch
                 (``decode_many_batched`` with done-mask + ``live_cap``)
+  prefill_ep /  the same programs traced under expert-parallel GSPMD
+  decode_chunk_ep
+                partitioning (MoE configs): params/qparams carry
+                ``param_shardings(expert_parallel=True)`` and the decode
+                state ``cache_shardings`` over an ABSTRACT 4-way mesh
+                (``jax.sharding.AbstractMesh`` — zero devices needed),
+                proving the structural contract (dispatch budget, no
+                dense dequant, no host sync) survives partitioning —
+                the serving-tier guarantee behind ``serving/cluster``
   retrace       accounting-only target for the live_cap ladder
 
 each across the config's bit mixes ("4/2"-style mixed and "4/0").
@@ -51,6 +60,9 @@ _ADMIT_B = 2
 _DECODE_B = 8
 _DECODE_CHUNK = 4
 _DECODE_SLOTS = 64
+# the sharded targets' abstract mesh width (matches the CI cluster leg's
+# simulated host-device count)
+_SHARD_N = 4
 
 
 def _sds(shape, dtype):
@@ -147,6 +159,64 @@ def _trace_decode_chunk(cfg, params, qparams):
                   counts)
 
 
+def _abstract_mesh():
+    """A (1, _SHARD_N) ("data", "model") mesh with NO devices behind it:
+    ``AbstractMesh`` shardings are legal ``jax.jit`` ``in_shardings`` and
+    trace under ``make_jaxpr``, so full-size configs lint their
+    partitioned programs on any backend — same zero-allocation property
+    as the rest of the linter."""
+    from jax.sharding import AbstractMesh
+    return AbstractMesh((("data", 1), ("model", _SHARD_N)))
+
+
+def _trace_sharded(cfg, params, qparams, f, extra_avals, extra_shardings):
+    """Trace ``f(params, qparams, *extras)`` jitted with expert-parallel
+    param/qparam shardings over the abstract mesh."""
+    from jax.sharding import NamedSharding, PartitionSpec as P
+    from repro.sharding.partition import param_shardings
+
+    mesh = _abstract_mesh()
+    repl = NamedSharding(mesh, P())
+    in_sh = (param_shardings(params, mesh, expert_parallel=True),
+             param_shardings(qparams, mesh, expert_parallel=True),
+             *(repl if s is None else s(mesh)
+               for s in extra_shardings))
+    jf = jax.jit(f, in_shardings=in_sh)
+    return _trace(jf, params, qparams, *extra_avals)
+
+
+def _trace_prefill_ep(cfg, params, qparams):
+    toks = _sds((1, _PREFILL_S), jnp.int32)
+
+    def f(p, q, tok):
+        return prefill(p, cfg, tok, qparams=q, cache_slots=_DECODE_SLOTS)
+
+    return _trace_sharded(cfg, params, qparams, f, (toks,), (None,))
+
+
+def _trace_decode_chunk_ep(cfg, params, qparams):
+    from repro.sharding.partition import cache_shardings
+
+    b = _DECODE_B
+    caches = jax.eval_shape(
+        lambda: init_decode_state(cfg, b, _DECODE_SLOTS))
+    toks = _sds((b,), jnp.int32)
+    done = _sds((b,), jnp.bool_)
+    counts = _sds((b,), jnp.int32)
+
+    def f(p, q, tok, cch, dn, em, lim, eos):
+        return decode_many_batched(
+            p, cfg, tok, cch, num_steps=_DECODE_CHUNK, done=dn,
+            n_emitted=em, limits=lim, eos_tokens=eos, qparams=q,
+            live_cap=live_cap_for(b, b))
+
+    return _trace_sharded(
+        cfg, params, qparams, f,
+        (toks, caches, done, counts, counts, counts),
+        (None, lambda m: cache_shardings(caches, m),
+         None, None, None, None))
+
+
 def build_targets(name: str, cfg: ModelConfig, *,
                   mixes: Sequence[str] = ("mixed", "4/0"),
                   ) -> List[LintTarget]:
@@ -167,6 +237,12 @@ def build_targets(name: str, cfg: ModelConfig, *,
         if _admission_supported(mcfg):
             phases.append(("admission", _trace_admission))
         phases.append(("decode_chunk", _trace_decode_chunk))
+        if mcfg.is_moe:
+            # expert-parallel partitioned traces (abstract mesh): the
+            # structural contract must survive GSPMD sharding — the
+            # serving tier runs exactly these programs on real meshes
+            phases.append(("prefill_ep", _trace_prefill_ep))
+            phases.append(("decode_chunk_ep", _trace_decode_chunk_ep))
         for phase, tracer in phases:
             tname = f"{name}/{label}/{phase}"
             try:

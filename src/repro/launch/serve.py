@@ -31,20 +31,34 @@ pre-policy path. Overload demo:
 
   PYTHONPATH=src python -m repro.launch.serve --requests 8 \
       --num-slots 2 --policy edf --priority 2 --deadline-s 30
+
+Multi-replica tier (``--replicas N``): the same open loop routed through
+a ``ClusterRouter`` — N sessions over ONE shared engine, least-loaded
+placement, one driver thread per replica — reporting per-replica health
+plus the merged cluster counters. ``--expert-parallel`` loads the model
+sharded over a (1, n_devices) mesh (routed expert stores sharded over E,
+KV slots over "model"); on CPU it best-effort requests 4 simulated host
+devices before jax initializes (``xla_force_host_platform_device_count``).
+Cluster demo:
+
+  PYTHONPATH=src python -m repro.launch.serve --requests 8 \
+      --replicas 2 --expert-parallel
 """
 from __future__ import annotations
 
 import argparse
 import dataclasses
 import json
+import time
 
 import jax
 
 from repro.configs import get_config
+from repro.launch.mesh import ensure_sim_devices, make_sim_mesh
 from repro.models import init_params
 from repro.models.config import DyMoEPolicy
-from repro.serving import DyMoEEngine, EngineConfig, Request, \
-    SamplingParams, submit_with_retry
+from repro.serving import ClusterRouter, DyMoEEngine, EngineConfig, \
+    Request, SamplingParams, submit_with_retry
 from repro.serving.cost_model import EdgeProfile
 
 
@@ -86,11 +100,26 @@ def main() -> None:
                     help="priority tier for the MID-RUN burst half of the "
                          "open loop (higher admits first and may preempt "
                          "under --policy edf; ignored under fifo)")
+    ap.add_argument("--replicas", type=int, default=1,
+                    help="> 1: route the open loop through a ClusterRouter "
+                         "— N sessions over one shared engine, least-"
+                         "loaded placement, one driver thread per replica "
+                         "— and report per-replica health")
+    ap.add_argument("--expert-parallel", action="store_true",
+                    help="load the model sharded over a (1, n_devices) "
+                         "mesh: routed expert stores sharded over E, KV "
+                         "slots over the model axis (on CPU, best-effort "
+                         "4 simulated host devices)")
     ap.add_argument("--reduced", action="store_true", default=True)
     ap.add_argument("--full", dest="reduced", action="store_false")
     ap.add_argument("--no-cache", action="store_true")
     ap.add_argument("--no-prefetch", action="store_true")
     args = ap.parse_args()
+
+    mesh = None
+    if args.expert_parallel:
+        # must happen before the first jax init for the flag to count
+        ensure_sim_devices(4)
 
     cfg = get_config(args.arch)
     if args.reduced:
@@ -100,13 +129,16 @@ def main() -> None:
         low_bits=0 if args.mode == "4/0" else 2,
         retention=args.retention)
     cfg = dataclasses.replace(cfg, dymoe=pol)
+    if args.expert_parallel:
+        mesh = make_sim_mesh(len(jax.devices()))
     params = init_params(cfg, jax.random.PRNGKey(0))
     engine = DyMoEEngine(cfg, params, EngineConfig(
         profile=EdgeProfile().with_vram(args.vram_gb),
         use_dymoe=args.mode != "off",
         enable_cache=not args.no_cache,
         enable_prefetch=not args.no_prefetch,
-        enable_dyquant=args.mode != "off"))
+        enable_dyquant=args.mode != "off"),
+        mesh=mesh, expert_parallel=args.expert_parallel)
     sampling = SamplingParams(temperature=args.temperature,
                               top_k=args.top_k, seed=args.seed)
 
@@ -131,11 +163,17 @@ def main() -> None:
         return
 
     # ---- open serving loop: staggered submissions + streamed tokens
-    session = engine.serve(num_slots=args.num_slots,
-                           slots_len=args.prompt_len + args.max_new
-                           + args.requests,
-                           max_queue=args.max_queue,
-                           policy=args.policy)
+    slots_len = args.prompt_len + args.max_new + args.requests
+    if args.replicas > 1:
+        session = ClusterRouter.replicate(
+            engine, args.replicas, num_slots=args.num_slots,
+            slots_len=slots_len, max_queue=args.max_queue,
+            policy=args.policy, threaded=True)
+    else:
+        session = engine.serve(num_slots=args.num_slots,
+                               slots_len=slots_len,
+                               max_queue=args.max_queue,
+                               policy=args.policy)
     handles = []
     try:
         n_first = max(1, args.requests // 2)
@@ -143,7 +181,10 @@ def main() -> None:
             handles.append(submit_with_retry(session, request(i),
                                              drive=True))
         for _ in range(2):       # the engine is already decoding...
-            engine.step()
+            if args.replicas > 1:
+                time.sleep(0.02)   # ...on the per-replica driver threads
+            else:
+                engine.step()
         # ...the burst arrives — under --policy edf with --priority > 0
         # it admits first and may preempt the busy bulk slots
         for i in range(n_first, args.requests):
@@ -166,10 +207,13 @@ def main() -> None:
         session.close()   # any still-unresolved handle -> SessionClosed
 
     def row(h):
+        placed = getattr(h, "replica", None)   # ClusterHandle only
         if h.error is not None:
-            return dict(id=h.request_id, error=type(h.error).__name__)
-        r = h.result()
-        return dict(id=h.request_id, priority=h.request.priority,
+            return dict(id=h.request_id, replica=placed,
+                        error=type(h.error).__name__)
+        r = h.result()   # already resolved by the drain above
+        return dict(id=h.request_id, replica=placed,
+                    priority=h.request.priority,
                     ttft_ms=r.ttft_s * 1e3,
                     tpot_ms=r.tpot_s * 1e3,
                     queue_wait_ms=(r.queue_wait_s or 0) * 1e3,
@@ -182,7 +226,10 @@ def main() -> None:
         arch=cfg.name, mode=args.mode, vram_gb=args.vram_gb,
         num_slots=args.num_slots, max_queue=args.max_queue,
         deadline_s=args.deadline_s, policy=args.policy,
-        priority=args.priority, health=dataclasses.asdict(health),
+        priority=args.priority, replicas=args.replicas,
+        expert_parallel=args.expert_parallel,
+        n_devices=len(jax.devices()),
+        health=dataclasses.asdict(health),
         requests=[row(h) for h in handles]), indent=2))
 
 

@@ -13,6 +13,8 @@ from repro.serving.request import Request, RequestHandle, SamplingParams, \
     TokenChunk
 from repro.serving.scheduler import ContinuousBatchingScheduler, \
     SchedulerConfig
+from repro.serving.cluster import ClusterHandle, ClusterHealth, \
+    ClusterRouter, Replica
 
 __all__ = ["EdgeProfile", "EdgeCostModel", "DyMoEEngine", "EngineConfig",
            "GenerationResult", "ReplayStream", "sample_token",
@@ -29,4 +31,6 @@ __all__ = ["EdgeProfile", "EdgeCostModel", "DyMoEEngine", "EngineConfig",
            # pressure degradation ladder
            "SchedulingPolicy", "FIFOPolicy", "EDFPolicy", "SLOPressure",
            "DegradationLadder", "make_policy", "estimate_service_s",
-           "effective_deadline"]
+           "effective_deadline",
+           # multi-replica serving tier: router + replica pool
+           "ClusterRouter", "ClusterHandle", "ClusterHealth", "Replica"]

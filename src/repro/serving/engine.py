@@ -228,18 +228,43 @@ class GenerationResult:
 
 class DyMoEEngine:
     def __init__(self, cfg: ModelConfig, params, engine_cfg: EngineConfig
-                 = EngineConfig(), faults=None):
+                 = EngineConfig(), faults=None, *, mesh=None,
+                 expert_parallel: bool = False, qparams=None):
         # ``faults``: optional repro.serving.faults.FaultInjector threaded
         # through the serving hot path (scheduler dispatch/replay/admission
         # sites and the expert cache's blob loads). None = every site is
         # a no-op and the fault-free trace is untouched.
+        #
+        # ``mesh``: optional jax.sharding.Mesh. The bf16 params and the
+        # packed/scales quantized stores are device_put sharded over it at
+        # load (``sharding/partition.py`` rules; ``expert_parallel=True``
+        # shards routed expert weights over E instead of intra-expert TP)
+        # and every serving session's KV slot state is laid out with
+        # ``cache_shardings`` — GSPMD then partitions the jitted
+        # prefill/decode programs along the same axes.
+        #
+        # ``qparams``: reuse an already-quantized packed store (e.g. a
+        # sibling replica engine's) instead of re-running quantize_model —
+        # cluster replicas share one copy of the weights.
         assert engine_cfg.decode_chunk >= 1, engine_cfg.decode_chunk
         self.cfg = cfg
         self.ecfg = engine_cfg
         self.faults = faults
+        self.mesh = mesh
+        self.expert_parallel = expert_parallel
+        if qparams is None and engine_cfg.use_dymoe:
+            qparams = quantize_model(params, cfg)
+        if mesh is not None:
+            from repro.sharding.partition import param_shardings, shard_tree
+            params = shard_tree(
+                params, param_shardings(params, mesh,
+                                        expert_parallel=expert_parallel))
+            if qparams is not None:
+                qparams = shard_tree(
+                    qparams, param_shardings(qparams, mesh,
+                                             expert_parallel=expert_parallel))
         self.params = params
-        self.qparams = (quantize_model(params, cfg)
-                        if engine_cfg.use_dymoe else None)
+        self.qparams = qparams if engine_cfg.use_dymoe else None
         self.cost = EdgeCostModel(cfg, engine_cfg.profile)
         self._prefill = jax.jit(partial(prefill, cfg=cfg),
                                 static_argnames=("cache_slots",
@@ -260,6 +285,16 @@ class DyMoEEngine:
         self._session = None   # engine-owned step-driven serving session
 
     # ------------------------------------------------------------ system
+    def shard_decode_state(self, caches):
+        """Lay a freshly initialized decode-state pytree out on the
+        engine's mesh (``cache_shardings``: KV slots flash-decode sharded
+        over "model", batch over "data"). Identity on an unsharded
+        engine, so the scheduler calls it unconditionally."""
+        if self.mesh is None:
+            return caches
+        from repro.sharding.partition import cache_shardings, shard_tree
+        return shard_tree(caches, cache_shardings(caches, self.mesh))
+
     def _make_orchestrator(self) -> Optional[DynamicExpertOrchestrator]:
         cfg, e = self.cfg, self.ecfg
         if not cfg.is_moe:

@@ -257,6 +257,11 @@ class SessionHealth:
     queue_rejections: int = 0     # submits rejected with QueueFull
     queue_depth: int = 0          # currently queued requests
     in_flight: int = 0            # currently admitted requests
+    # monotonic lifetime counters (router least-loaded placement reads
+    # these: depth+in_flight is the instantaneous load, submitted breaks
+    # ties deterministically between equally-loaded replicas)
+    submitted: int = 0            # accepted submits, lifetime
+    completed: int = 0            # handles resolved (result OR error)
     # SLO policy layer (repro.serving.policy; all zero under FIFO):
     infeasible_shed: int = 0      # proactively shed (modeled bound > SLO)
     preemptions: int = 0          # in-flight rows evicted for urgent work

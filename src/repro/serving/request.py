@@ -301,6 +301,7 @@ class RequestHandle:
             self._result = result
             self._finished.set()
         self._events.put(_STREAM_END)
+        self._notify_completed()
 
     def _finish_error(self, exc: BaseException) -> None:
         """Resolve this handle with a typed error (fault paths: replay
@@ -314,3 +315,12 @@ class RequestHandle:
             self._error = exc
             self._finished.set()
         self._events.put(_STREAM_END)
+        self._notify_completed()
+
+    def _notify_completed(self) -> None:
+        # exactly once per handle (both finalizers are first-wins), so
+        # the session's monotonic `completed` counter matches resolved
+        # handles whatever mix of results and typed errors they carry
+        note = getattr(self._session, "_note_completed", None)
+        if note is not None:
+            note()

@@ -308,7 +308,8 @@ class ContinuousBatchingScheduler:
     """
 
     def __init__(self, engine, num_slots: Optional[int] = None,
-                 scfg: SchedulerConfig = SchedulerConfig()):
+                 scfg: SchedulerConfig = SchedulerConfig(),
+                 faults=None):
         self.engine = engine
         self.scfg = scfg
         self._num_slots = num_slots  # None: resolved at start
@@ -328,7 +329,10 @@ class ContinuousBatchingScheduler:
         self._replay_epoch = 0       # bumps turn queued jobs into no-ops
         self._last_fault: Optional[BaseException] = None
         self._max_queue = self.scfg.max_queue
-        self._faults = getattr(engine, "faults", None) or NO_FAULTS
+        # per-session injector override (a cluster replica gets its own
+        # fault state even when replicas share one engine); defaults to
+        # the engine-wide injector
+        self._faults = faults or getattr(engine, "faults", None) or NO_FAULTS
         # SLO policy layer (FIFO by default: every hook is a no-op and
         # the scheduler's behavior is byte-for-byte the pre-policy path)
         self._policy = make_policy(self.scfg.policy)
@@ -421,7 +425,8 @@ class ContinuousBatchingScheduler:
         self._orch = engine._make_orchestrator()  # ONE shared cache+clock
         b = self._b
         self._states: List[Optional[_SlotState]] = [None] * b
-        self._caches = init_decode_state(cfg, b, self._slots_len)
+        self._caches = engine.shard_decode_state(
+            init_decode_state(cfg, b, self._slots_len))
         self._tok_d = jnp.zeros(b, jnp.int32)  # ON DEVICE between chunks
         self._done = np.ones(b, bool)          # empty slots stay frozen
         self._emitted = np.zeros(b, np.int32)
@@ -560,7 +565,15 @@ class ContinuousBatchingScheduler:
             if h.temperature > 0.0:
                 self._any_sampling = True
             self._queue.append(h)
+            self._health.submitted += 1
         return h
+
+    def _note_completed(self) -> None:
+        """Handle-finalizer callback (see ``RequestHandle._finish*``):
+        bumps the monotonic ``completed`` counter exactly once per
+        resolved handle, result and typed-error paths alike."""
+        with self._lock:
+            self._health.completed += 1
 
     # -------------------------------------------------------------- step
     def step(self) -> bool:

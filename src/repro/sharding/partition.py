@@ -103,8 +103,13 @@ _RULES = [
 _EP_RULES = [
     # expert-parallel override: routed expert weights sharded over E.
     # Trailing-dims rules: bf16 (E, K, N); packed (E, N, K/vpb);
-    # scales (E, G, N) — E is dim -3 in all three.
-    (r"/moe/w_(gate|up|down)(\.(packed|scales))?$",
+    # scales (E, G, N) — E is dim -3 in all three. The quantized store
+    # nests a precision level under each weight
+    # (``w_gate/{high,low}/{packed,scales}``), so the optional
+    # ``/(high|low)`` component must be matched or every quantized leaf
+    # silently falls through to the intra-expert TP rules below — caught
+    # by test_sharding_quantized.py over every shipped config.
+    (r"/moe/w_(gate|up|down)(/(high|low))?(\.(packed|scales))?$",
      (MODEL_AXIS, None, None)),
 ]
 
